@@ -1,0 +1,142 @@
+"""Perf-iteration driver (EXPERIMENTS.md §Perf): recompile chosen cells
+with implementation-knob overrides and record the roofline terms per
+variant in artifacts/perf/<cell>__<variant>.json.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen3-4b \
+      --shape decode_32k --variant tponly
+
+Variants (knobs):
+  classic   track=classic, fsdp_stream=False   (paper-faithful baseline:
+            leader-mediated 2-round vote, naive whole-tree FSDP gather)
+  fast      track=fast,    fsdp_stream=False   (paper's fast track fused
+            into the gradient psum)
+  stream    track=fast,    fsdp_stream=True    (beyond-paper: ZeRO-3 weight
+            streaming inside the scan)
+  fsdpserve serving with FSDP'd params          (baseline for decode cells)
+  tponly    serving with TP-only params         (beyond-paper decode fix)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    " --xla_disable_hlo_passes=all-reduce-promotion"
+)
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES
+from repro.launch.dryrun import _shaped, input_specs, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import zoo
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import sharding as shd
+from repro.runtime import spmd
+
+OUT_DIR = os.path.join("artifacts", "perf")
+
+
+def compile_train(arch, shape_name, mesh, *, track, fsdp_stream):
+    cfg = registry.get(arch)
+    model = zoo.build(cfg, dtype=jnp.bfloat16)
+    opt_cfg = AdamWConfig()
+    step_fn, _, _ = spmd.build_train_step(
+        model, opt_cfg, mesh, track=track, fsdp_stream=fsdp_stream
+    )
+    state_tpl = jax.eval_shape(
+        lambda rng: spmd.make_train_state(model, opt_cfg, rng, False),
+        jax.random.PRNGKey(0),
+    )
+    specs = spmd.state_specs(model, opt_cfg, mesh, False)
+    structs = _shaped(state_tpl, mesh, specs)
+    batch = input_specs(arch, shape_name, mesh)
+    return step_fn.lower(structs, batch).compile()
+
+
+def compile_decode(arch, shape_name, mesh, *, fsdp):
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    model = zoo.build(cfg, dtype=jnp.bfloat16)
+    p_tpl = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = shd.tree_param_specs(p_tpl, mesh, fsdp=fsdp)
+    p_structs = _shaped(p_tpl, mesh, p_specs)
+    cache_tpl = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    c_specs = shd.tree_cache_specs(cache_tpl, mesh)
+    c_structs = _shaped(cache_tpl, mesh, c_specs)
+    batch = input_specs(arch, shape_name, mesh)
+    fn = jax.jit(model.decode_step, donate_argnums=(1,))
+    return fn.lower(p_structs, c_structs, batch).compile()
+
+
+VARIANTS = {
+    "classic": dict(kind="train", track="classic", fsdp_stream=False),
+    "fast": dict(kind="train", track="fast", fsdp_stream=False),
+    "stream": dict(kind="train", track="fast", fsdp_stream=True),
+    # Mesh reshapes (same 256 chips): trade TP activation all-reduces for
+    # FSDP weight gathers — the Megatron-vs-ZeRO axis.
+    "mesh64x4": dict(kind="train", track="fast", fsdp_stream=True,
+                     mesh_shape=(64, 4)),
+    "mesh256x1": dict(kind="train", track="fast", fsdp_stream=True,
+                      mesh_shape=(256, 1)),
+    "fsdpserve": dict(kind="decode", fsdp=True),
+    "tponly": dict(kind="decode", fsdp=False),
+    "tponly64x4": dict(kind="decode", fsdp=False, mesh_shape=(64, 4)),
+}
+
+
+def run(arch: str, shape_name: str, variant: str):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{variant}.json")
+    v = dict(VARIANTS[variant])
+    kind = v.pop("kind")
+    shape_override = v.pop("mesh_shape", None)
+    if shape_override is not None:
+        mesh = jax.make_mesh(shape_override, ("data", "model"))
+    else:
+        mesh = make_production_mesh()
+    t0 = time.time()
+    if kind == "train":
+        compiled = compile_train(arch, shape_name, mesh, **v)
+    else:
+        compiled = compile_decode(arch, shape_name, mesh, **v)
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, mesh.devices.size)
+    from repro.launch import hlo_analysis
+    deep = hlo_analysis.analyze(hlo, mesh.devices.size)
+    out = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "compile_s": t_compile,
+        "cost_analysis": {k: float(val) for k, val in cost.items()
+                          if isinstance(val, (int, float))},
+        "collectives": coll,
+        "hlo_analysis": {k: v for k, v in deep.items() if k != "biggest_collectives"},
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[perf] {arch}/{shape_name}/{variant}: "
+          f"flops={deep['flops']:.3g} bytes={deep['bytes_accessed']:.3g} "
+          f"coll={deep['collective_bytes']:.3g} "
+          f"counts={ {k: int(v) for k, v in deep['collective_counts'].items()} }")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Generate the EXPERIMENTS.md §Roofline table and §Perf before/after
+comparison from artifacts (dryrun_baseline = iteration-0/1 state, dryrun =
+final state, perf = per-variant knob runs).
+
+  PYTHONPATH=src python -m benchmarks.perf_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, analyze_cell,
+                                 build_table, calibrate, model_flops)
+
+PERF_DIR = os.path.join("artifacts", "perf")
+
+
+def fmt_s(x):
+    if x != x:
+        return "--"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def roofline_markdown(mesh="single", artifact_root="artifacts/dryrun"):
+    calib = calibrate()
+    import benchmarks.roofline as R
+
+    old = R.ARTIFACT_DIR
+    R.ARTIFACT_DIR = artifact_root
+    try:
+        rows = build_table(mesh, calib)
+    finally:
+        R.ARTIFACT_DIR = old
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | useful | roofline |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |"
+        )
+    return "\n".join(lines), rows
+
+
+def variant_row(arch, shape, variant, calib):
+    path = os.path.join(PERF_DIR, f"{arch}__{shape}__{variant}.json")
+    if not os.path.exists(path):
+        return None
+    d = json.load(open(path))
+    deep = d.get("hlo_analysis")
+    if deep:
+        flops, b, coll = deep["flops"], deep["bytes_accessed"], deep["collective_bytes"]
+        counts = {k: int(v) for k, v in deep["collective_counts"].items()}
+    else:
+        cost = d["cost_analysis"]
+        flops = cost.get("flops", float("nan")) * calib
+        b = cost.get("bytes accessed", float("nan"))
+        coll = d["collectives"]["total_bytes"]
+        counts = d["collectives"]["counts"]
+    return {
+        "variant": variant,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": b / HBM_BW,
+        "collective_s": coll / ICI_BW,
+        "counts": counts,
+    }
+
+
+def perf_markdown(cells):
+    calib = calibrate()
+    out = []
+    for arch, shape, variants in cells:
+        out.append(f"\n**{arch} × {shape}**\n")
+        out.append("| variant | compute | memory | collective | collective ops |")
+        out.append("|---|---:|---:|---:|---|")
+        for v in variants:
+            r = variant_row(arch, shape, v, calib)
+            if r is None:
+                continue
+            cnt = ",".join(f"{k}:{n}" for k, n in sorted(r["counts"].items()))
+            out.append(
+                f"| {v} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+                f"{fmt_s(r['collective_s'])} | {cnt} |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    md, rows = roofline_markdown("single", "artifacts/dryrun")
+    print("## Final roofline (single pod, per device)\n")
+    print(md)
+    if os.path.isdir("artifacts/dryrun_baseline"):
+        md_b, rows_b = roofline_markdown("single", "artifacts/dryrun_baseline")
+        by_key = {(r.get("arch"), r.get("shape")): r for r in rows_b}
+        print("\n## Baseline -> final dominant-term movement\n")
+        print("| arch | shape | dominant | baseline | final | delta |")
+        print("|---|---|---|---:|---:|---:|")
+        for r in rows:
+            if "skipped" in r:
+                continue
+            b = by_key.get((r["arch"], r["shape"]))
+            if not b or "skipped" in b:
+                continue
+            k = r["dominant"] + "_s"
+            bk = b.get(k, float("nan"))
+            fk = r.get(k, float("nan"))
+            if bk == bk and fk == fk and bk > 0:
+                print(f"| {r['arch']} | {r['shape']} | {r['dominant']} | "
+                      f"{fmt_s(bk)} | {fmt_s(fk)} | {100*(fk-bk)/bk:+.0f}% |")
+    cells = [
+        ("llama4-scout-17b-a16e", "train_4k", ["classic", "fast", "stream"]),
+        ("qwen3-1.7b", "train_4k", ["classic", "fast", "stream"]),
+        ("qwen3-4b", "decode_32k", ["fsdpserve", "tponly"]),
+    ]
+    print("\n## Hillclimb variants\n")
+    print(perf_markdown(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV rows (us_per_call is
+simulated commit latency in microseconds where applicable)."""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    rows = []
+
+    # Figure 1: latency vs packet loss (Raft vs Fast Raft).
+    from benchmarks import latency_vs_loss
+
+    fig1 = latency_vs_loss.sweep(n_seeds=3, n_ops=20)
+    for r in fig1:
+        rows.append((
+            f"fig1/{r['protocol']}/loss={r['loss']:.2f}",
+            r["mean_latency"] * 1e3,  # sim-ms -> us
+            f"commit_rate={r['commit_rate']:.3f};fallback={r['fallback_fraction']:.2f}",
+        ))
+
+    # Table: message rounds to commit (the core Fast Raft claim).
+    from benchmarks import rounds_to_commit
+
+    for proto in ("raft", "fastraft"):
+        for via_leader in (True, False):
+            rounds = rounds_to_commit.measure(proto, via_leader)
+            rows.append((
+                f"rounds/{proto}/{'leader' if via_leader else 'follower'}",
+                rounds * rounds_to_commit.L * 1e3,
+                f"rounds={rounds:.2f}",
+            ))
+
+    # Table: throughput under bursty load.
+    from benchmarks import throughput
+
+    for proto in ("raft", "fastraft"):
+        for burst in (4, 16):
+            r = throughput.run(proto, burst, n_bursts=3)
+            rows.append((
+                f"throughput/{proto}/burst={burst}",
+                r["mean_latency"] * 1e3,
+                f"ops_per_s={r['ops_per_sec']:.1f};fast_share={r['fast_share']:.2f}",
+            ))
+
+    # Roofline over dry-run artifacts (skipped gracefully if not yet run).
+    try:
+        from benchmarks import roofline
+
+        table = roofline.build_table("single")
+        for r in table:
+            if "skipped" in r:
+                rows.append((f"roofline/{r['arch']}/{r['shape']}", float("nan"),
+                             "skipped"))
+            else:
+                rows.append((
+                    f"roofline/{r['arch']}/{r['shape']}",
+                    r["step_s_bound"] * 1e6,
+                    f"dominant={r['dominant']};roofline_frac={r['roofline_frac']:.3f}",
+                ))
+    except Exception as e:  # artifacts missing
+        rows.append(("roofline", float("nan"), f"unavailable:{type(e).__name__}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

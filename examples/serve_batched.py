@@ -1,0 +1,77 @@
+"""Batched serving with consensus-coordinated rollout.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+A small request queue feeds a batched prefill+decode loop (the decode_32k
+serving path at laptop scale). Model-version rollout is committed through
+the Fast Raft control plane before the server switches — every replica in a
+fleet would flip at the same log index.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.mesh import make_host_mesh
+from repro.models import zoo
+from repro.runtime import spmd
+from repro.runtime.controlplane import ControlPlane
+
+MAX_LEN = 96
+GEN = 24
+
+
+def main() -> int:
+    cfg = registry.get("qwen3-1.7b", reduced=True)
+    model = zoo.build(cfg, dtype=jnp.float32)
+    mesh = make_host_mesh()
+    params_v1 = model.init(jax.random.PRNGKey(0))
+    prefill_fn, decode_fn = spmd.build_serve_fns(model, mesh, MAX_LEN)
+
+    control = ControlPlane(n_nodes=3, seed=1)
+    assert control.rollout(f"{cfg.name}@v1")
+    print("rollout v1 committed via Fast Raft")
+
+    # A burst of 8 requests with different prompt lengths, padded & batched.
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, (rng.randint(8, 64),))
+               for _ in range(8)]
+    lens = np.array([len(p) for p in prompts])
+    width = int(lens.max())
+    batch_tok = np.zeros((len(prompts), width), np.int32)
+    for i, p in enumerate(prompts):
+        batch_tok[i, -len(p):] = p  # left-pad: aligned last positions
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_fn(params_v1, {"tokens": jnp.asarray(batch_tok)})
+    tokens = jnp.argmax(logits, axis=-1)[:, None]
+    generated = [tokens]
+    for _ in range(GEN - 1):
+        logits, cache = decode_fn(params_v1, cache, {"tokens": tokens})
+        tokens = jnp.argmax(logits, axis=-1)[:, None]
+        generated.append(tokens)
+    jax.block_until_ready(generated[-1])
+    dt = time.perf_counter() - t0
+    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
+    print(f"served {len(prompts)} requests x {GEN} new tokens "
+          f"in {dt*1e3:.0f} ms ({len(prompts)*GEN/dt:.0f} tok/s on CPU)")
+    for i in range(2):
+        print(f"  req{i} (prompt {lens[i]} tok) -> {out[i, :10].tolist()}...")
+
+    # Hot rollout to v2: committed BEFORE any replica switches.
+    params_v2 = model.init(jax.random.PRNGKey(2))
+    assert control.rollout(f"{cfg.name}@v2")
+    logits2, _ = prefill_fn(params_v2, {"tokens": jnp.asarray(batch_tok)})
+    print("rollout v2 committed; new weights serving "
+          f"(first-logit delta {float(jnp.mean(jnp.abs(logits2 - logits))):.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

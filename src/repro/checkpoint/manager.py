@@ -1,0 +1,174 @@
+"""Checkpointing with consensus-committed manifests.
+
+Durability protocol (2-phase, the paper's technique on the control path):
+  1. Every host writes its parameter/optimizer shards to
+     ``<dir>/step_N/...npy`` plus ``manifest.json.tmp``.
+  2. The manifest digest is proposed as a Fast Raft log entry
+     (``ckpt:<step>:<digest>``). Only when the entry COMMITS is the manifest
+     renamed to ``manifest.json`` — a checkpoint either exists for the whole
+     fleet or not at all, and restart-after-failover always agrees on the
+     newest committed step (no torn checkpoints after partial pod loss).
+
+Elastic restore: arrays are loaded as host numpy and re-device_put with the
+CURRENT mesh's shardings, so the restore mesh may differ from the save mesh
+(elastic scaling after node failure).
+
+The async writer runs off the step path; ``wait()`` joins it (called before
+the next save or at exit).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten_with_paths(tree: Params) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str,
+        commit_fn: Optional[Callable[[str], bool]] = None,
+        keep_last: int = 3,
+    ):
+        """commit_fn: proposes the manifest record through the control plane
+        and returns True once committed. None = local-only commit (tests)."""
+        self.dir = directory
+        self.commit_fn = commit_fn
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, trees: Dict[str, Params], async_: bool = True) -> None:
+        self.wait()
+        # Materialize on host BEFORE going async (donated buffers may die).
+        host_trees = {
+            name: _flatten_with_paths(tree) for name, tree in trees.items()
+        }
+
+        def work():
+            try:
+                self._write(step, host_trees)
+            except BaseException as e:  # surfaced by wait()
+                self._error = e
+
+        if async_:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self._raise_if_failed()
+
+    def _write(self, step: int, host_trees) -> None:
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(d, exist_ok=True)
+        index = {}
+        digest = hashlib.sha256()
+        for name, leaves in host_trees.items():
+            for key, arr in leaves:
+                fname = f"{name}__{key.replace('/', '__')}.npy"
+                np.save(os.path.join(d, fname), arr)
+                index[f"{name}/{key}"] = {
+                    "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                }
+                digest.update(fname.encode())
+                digest.update(str(arr.shape).encode())
+        manifest = {"step": step, "index": index, "digest": digest.hexdigest()}
+        tmp = os.path.join(d, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        # 2-phase commit through the control plane.
+        record = f"ckpt:{step}:{manifest['digest']}"
+        committed = True if self.commit_fn is None else self.commit_fn(record)
+        if committed:
+            os.replace(tmp, os.path.join(d, "manifest.json"))
+            self._gc()
+        # Uncommitted checkpoints keep only the .tmp manifest and are
+        # invisible to restore() — exactly the torn-checkpoint guarantee.
+
+    def _gc(self) -> None:
+        steps = self.committed_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # --------------------------------------------------------------- restore
+
+    def committed_steps(self) -> List[int]:
+        steps = []
+        if not os.path.isdir(self.dir):
+            return steps
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, name, "manifest.json")
+            ):
+                steps.append(int(name[5:]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        templates: Dict[str, Params],
+        step: Optional[int] = None,
+        shardings: Optional[Dict[str, Any]] = None,
+    ) -> Tuple[int, Dict[str, Params]]:
+        """Load into the structure of ``templates``; optionally device_put
+        with per-tree shardings (elastic re-shard)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        out: Dict[str, Params] = {}
+        for name, template in templates.items():
+            flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+            leaves = []
+            for path, leaf in flat:
+                key = "/".join(
+                    str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+                )
+                entry = manifest["index"][f"{name}/{key}"]
+                arr = np.load(os.path.join(d, entry["file"]))
+                assert list(arr.shape) == list(leaf.shape), (key, arr.shape, leaf.shape)
+                leaves.append(arr.astype(leaf.dtype))
+            tree = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), leaves
+            )
+            if shardings is not None and name in shardings and shardings[name] is not None:
+                tree = jax.device_put(tree, shardings[name])
+            out[name] = tree
+        return step, out

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+
+_MODULES = {
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get(name: str, reduced: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.REDUCED if reduced else mod.CONFIG

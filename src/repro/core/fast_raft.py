@@ -1,0 +1,464 @@
+"""Fast Raft (Castiglia, Goldberg & Patterson 2020) on top of classic Raft.
+
+Fast track (paper section 2.2):
+
+  round 1  proposer  -> ALL    FastPropose(index=i, entry=e)
+  round 2  acceptors -> leader FastVote(i, e)        (tentative insert at i)
+  round 3  leader    -> ALL    FastFinalize(i, e)    once votes >= ceil(3M/4)
+
+versus the classic track for a non-leader proposer (forward -> AppendEntries
+-> acks -> commit-bearing heartbeat = 4 rounds). The fast track commits in 3
+rounds from any proposer and removes the leader as the serialization point
+for replication fan-out.
+
+Design decisions (and the safety arguments behind them):
+
+* The authoritative log (``self.log``) stays contiguous and append-only as in
+  classic Raft. Fast-track slots live in a sparse overlay ``self.fast_slots``
+  until FINALIZED *and* contiguous, at which point they merge into the log.
+  Every classic-Raft invariant holds by construction; the paper's
+  "over-writable log" is confined to the overlay.
+* An acceptor votes for the FIRST proposal it sees per (term, index) —
+  first-come-first-served, as in Fast Paxos — and the tentative entry is part
+  of persistent state (the durable vote).
+* Fast commit = ceil(3M/4) votes *and* slot contiguity at the leader. A
+  slot that reaches quorum before its gap fills (vote jitter) is HELD
+  finalized in the overlay and merges the moment the gap fills; if the gap
+  never fills, a liveness timer re-routes the held entry through the classic
+  track (safe: a non-contiguous slot was never observable as committed).
+* Recovery (new leader): vote-reply tails carry each voter's overlay. In a
+  sample of R granted votes, an entry that MAY have fast-committed appears
+  >= fq + R - M times (quorum intersection), and no two entries can both
+  reach that bound for one slot (2*(fq + R - M) > R for all M >= 2, R >=
+  majority). Such entries are re-adopted AT THEIR ORIGINAL INDEX, overwriting
+  uncommitted classic entries if necessary — a committed classic entry at the
+  same index is impossible because majority(M) + fq(M) > M means the two
+  holder sets would have to overlap in a node that accepted both, which the
+  per-slot first-come-first-served rule forbids. Sub-threshold tail entries
+  provably did not commit and are optionally re-appended for liveness.
+* EntryId-level dedup makes every fallback idempotent: a command commits at
+  most once no matter how many tracks and retries it traveled.
+
+Known liveness (not safety) gap, matching the paper's own observations about
+lossy networks: if the leader's own slot was claimed by a conflicting
+proposal, it lacks the losing command's payload (FastVotes carry ids, not
+payloads) and cannot fall the loser back itself; the proposer's inflight
+timeout re-routes the command through the classic track instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.core.raft import Outputs, RaftNode
+from repro.core.types import (
+    AppendEntriesArgs,
+    Entry,
+    EntryId,
+    FastFinalize,
+    FastPropose,
+    FastVote,
+    ForwardOperation,
+    NodeId,
+    Role,
+    Slot,
+    SlotState,
+    fast_quorum,
+)
+
+
+@dataclasses.dataclass
+class _InflightProposal:
+    index: int
+    command: Any
+    entry_id: EntryId
+    started_at: float
+    fell_back: bool = False
+
+
+@dataclasses.dataclass
+class _SlotTally:
+    """Leader-side vote accounting for one fast-track slot."""
+
+    votes: Dict[EntryId, Set[NodeId]] = dataclasses.field(default_factory=dict)
+    entries: Dict[EntryId, Entry] = dataclasses.field(default_factory=dict)
+    first_vote_at: float = 0.0
+    resolved: bool = False
+
+
+class FastRaftNode(RaftNode):
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.config.fast_track = True
+        # Sparse overlay: index -> Slot (TENTATIVE or FINALIZED-awaiting-merge).
+        self.fast_slots: Dict[int, Slot] = {}
+        # Proposer state.
+        self.inflight: Dict[EntryId, _InflightProposal] = {}
+        self._next_fast_hint = 0
+        # Leader tallies: index -> _SlotTally.
+        self.tallies: Dict[int, _SlotTally] = {}
+        # Leader: finalized-but-non-contiguous slots awaiting their gap.
+        self._finalized_held: Dict[int, float] = {}
+        # Liveness nicety: re-propose sub-threshold entries seen during
+        # recovery (safe — dedup by entry_id).
+        self.readopt_uncommitted = True
+
+    # ------------------------------------------------------------ proposing
+
+    def _submit_mode(self) -> str:
+        fast = (
+            self.role is not Role.LEADER
+            and len(self.inflight) < self.config.max_fast_inflight
+            and self.leader_id is not None
+        )
+        return "fast" if fast else "classic"
+
+    def _non_leader_submit(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
+        if len(self.inflight) >= self.config.max_fast_inflight or self.leader_id is None:
+            return super()._non_leader_submit(command, entry_id, now)
+        index = self._choose_fast_index()
+        entry = Entry(term=self.term, command=command, entry_id=entry_id, proposed_at=now)
+        self.inflight[entry_id] = _InflightProposal(index, command, entry_id, now)
+        self._count("fast_proposals")
+
+        # Tentatively accept our own proposal (we are one of the M acceptors).
+        self.fast_slots[index] = Slot(entry.clone(), SlotState.TENTATIVE)
+        out: Outputs = [
+            (p, FastPropose(term=self.term, src=self.id, index=index, entry=entry))
+            for p in self.peers()
+        ]
+        out.append(
+            (
+                self.leader_id,
+                FastVote(term=self.term, src=self.id, index=index,
+                         entry_id=entry_id, voter=self.id),
+            )
+        )
+        self._count("msgs_out", len(out))
+        return out
+
+    def _choose_fast_index(self) -> int:
+        hi = max(
+            self.last_log_index(),
+            max(self.fast_slots.keys(), default=0),
+            self._next_fast_hint,
+        )
+        self._next_fast_hint = hi + 1
+        return hi + 1
+
+    def _leader_append(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
+        # Held finalized slots take their indexes before classic traffic;
+        # classic appends then shadow any remaining overlay reservations at
+        # or below their index (displaced proposals re-route via timeout).
+        self._merge_finalized(now)
+        out = super()._leader_append(command, entry_id, now)
+        for index in list(self.fast_slots.keys()):
+            if index <= self.last_log_index():
+                self.fast_slots.pop(index)
+                self._finalized_held.pop(index, None)
+        return out
+
+    # ------------------------------------------------------------- acceptors
+
+    def _handle_FastPropose(self, msg: FastPropose, now: float) -> Outputs:
+        if msg.term < self.term or msg.entry is None:
+            return []
+        index, entry = msg.index, msg.entry
+        authoritative = self.slot(index)
+        if authoritative is not None:
+            # Classic track already owns this index. Vote only if it's the
+            # same entry (harmless); otherwise the proposal is dead here.
+            if not authoritative.entry.same_entry(entry):
+                self._count("fast_rejects")
+                return []
+        else:
+            held = self.fast_slots.get(index)
+            if held is None:
+                self.fast_slots[index] = Slot(entry.clone(), SlotState.TENTATIVE)
+                self._next_fast_hint = max(self._next_fast_hint, index)
+            elif not held.entry.same_entry(entry):
+                self._count("fast_conflicts")
+                return []  # first-come-first-served: keep existing vote
+        return self._emit_fast_vote(index, entry.entry_id, now)
+
+    def _emit_fast_vote(self, index: int, entry_id: EntryId, now: float) -> Outputs:
+        if self.role is Role.LEADER:
+            return self._record_fast_vote(index, entry_id, self.id, now)
+        if self.leader_id is None:
+            return []
+        return [
+            (
+                self.leader_id,
+                FastVote(term=self.term, src=self.id, index=index,
+                         entry_id=entry_id, voter=self.id),
+            )
+        ]
+
+    # ---------------------------------------------------------- leader side
+
+    def _handle_FastVote(self, msg: FastVote, now: float) -> Outputs:
+        if self.role is not Role.LEADER or msg.term < self.term or msg.entry_id is None:
+            return []
+        return self._record_fast_vote(msg.index, msg.entry_id, msg.voter, now)
+
+    def _record_fast_vote(
+        self, index: int, entry_id: EntryId, voter: NodeId, now: float
+    ) -> Outputs:
+        if entry_id in self._entry_index:
+            return []  # already authoritative (fast-merged or classicized)
+        tally = self.tallies.setdefault(index, _SlotTally(first_vote_at=now))
+        if tally.resolved:
+            return []
+        tally.votes.setdefault(entry_id, set()).add(voter)
+        s = self.fast_slots.get(index)
+        if s is not None and s.entry.entry_id == entry_id:
+            tally.entries.setdefault(entry_id, s.entry)
+
+        votes = len(tally.votes[entry_id])
+        fq = fast_quorum(self.m)
+        if votes >= fq and entry_id in tally.entries:
+            return self._finalize_fast_slot(index, tally.entries[entry_id], now)
+        # Definitive conflict: no candidate can still reach the fast quorum.
+        total_cast = sum(len(v) for v in tally.votes.values())
+        best = max((len(v) for v in tally.votes.values()), default=0)
+        if best + (self.m - total_cast) < fq and len(tally.votes) > 1:
+            return self._fallback_slot(index, now)
+        return []
+
+    def _finalize_fast_slot(self, index: int, entry: Entry, now: float) -> Outputs:
+        tally = self.tallies.get(index)
+        if tally is not None:
+            tally.resolved = True
+        if self.slot(index) is not None or entry.entry_id in self._entry_index:
+            return []  # classic track already owns this index / entry
+        # Quorum reached. If not yet contiguous (vote jitter can complete
+        # slot k+1 before slot k), HOLD the finalized slot in the overlay;
+        # it merges the moment the gap fills. A liveness timer re-routes
+        # held slots through the classic track if the gap never fills
+        # (safe: a non-contiguous slot was never observable as committed).
+        self.fast_slots[index] = Slot(entry.clone(), SlotState.FINALIZED)
+        self._count("fast_commits")
+        if index != self.last_log_index() + 1:
+            self._finalized_held[index] = now
+            self._count("fast_holds")
+        self._merge_finalized(now)
+        out: Outputs = [
+            (
+                p,
+                FastFinalize(term=self.term, src=self.id, index=index,
+                             entry=entry, leader_commit=self.commit_index),
+            )
+            for p in self.peers()
+        ]
+        self._count("msgs_out", len(out))
+        return out
+
+    def _fallback_slot(self, index: int, now: float) -> Outputs:
+        """Conflict or timeout: push the slot's candidates onto the classic
+        track, best-supported first. Idempotent thanks to entry_id dedup."""
+        tally = self.tallies.get(index)
+        if tally is None or tally.resolved:
+            return []
+        tally.resolved = True
+        self._count("fast_fallbacks")
+        ranked = sorted(
+            tally.votes.keys(),
+            key=lambda eid: (-len(tally.votes[eid]), str(eid)),
+        )
+        out: Outputs = []
+        for eid in ranked:
+            entry = tally.entries.get(eid)
+            if entry is None:
+                continue  # payload unknown; proposer's timeout re-routes it
+            if self.metrics is not None:
+                self.metrics.fell_back(eid, now)
+            out += super()._leader_append(entry.command, eid, now)
+        return out
+
+    # ------------------------------------------------------------ finalize
+
+    def _handle_FastFinalize(self, msg: FastFinalize, now: float) -> Outputs:
+        if msg.term < self.term or msg.entry is None:
+            return []
+        index, entry = msg.index, msg.entry
+        if self.slot(index) is None and entry.entry_id not in self._entry_index:
+            # Leader's finalize overrides any conflicting tentative entry.
+            self.fast_slots[index] = Slot(entry.clone(), SlotState.FINALIZED)
+        self._merge_finalized(now)
+        if msg.leader_commit > self.commit_index:
+            self._advance_commit(msg.leader_commit, now)
+        return []
+
+    def _merge_finalized(self, now: float) -> None:
+        """Fold contiguous FINALIZED overlay slots into the authoritative log
+        and (leader only) commit them — a contiguous ceil(3M/4) fast quorum
+        IS commit."""
+        merged_any = False
+        while True:
+            nxt = self.last_log_index() + 1
+            s = self.fast_slots.get(nxt)
+            if s is None or s.state is not SlotState.FINALIZED:
+                break
+            del self.fast_slots[nxt]
+            self._finalized_held.pop(nxt, None)
+            if s.entry.entry_id in self._entry_index:
+                continue  # already classicized elsewhere in the log
+            self._append_slot(s)
+            merged_any = True
+        if merged_any and self.role is Role.LEADER:
+            self._advance_commit(self._highest_contiguous_finalized(), now)
+
+    def _highest_contiguous_finalized(self) -> int:
+        i = self.commit_index
+        while i < self.last_log_index():
+            if self.slot(i + 1).state is SlotState.FINALIZED:
+                i += 1
+            else:
+                break
+        return i
+
+    # --------------------------------------------------------------- ticks
+
+    def _tick_protocol(self, now: float) -> Outputs:
+        out: Outputs = []
+        timeout = self.config.fast_vote_timeout
+        if self.role is Role.LEADER:
+            for index, tally in list(self.tallies.items()):
+                if not tally.resolved and now - tally.first_vote_at > timeout:
+                    out += self._fallback_slot(index, now)
+            # Liveness for held finalized slots whose gap never fills:
+            # re-route them through the classic track in index order.
+            stuck = sorted(i for i, t in self._finalized_held.items()
+                           if now - t > timeout)
+            for index in stuck:
+                s = self.fast_slots.pop(index, None)
+                self._finalized_held.pop(index, None)
+                if s is not None and s.entry.entry_id not in self._entry_index:
+                    self._count("fast_held_reroutes")
+                    out += super()._leader_append(s.entry.command,
+                                                  s.entry.entry_id, now)
+        # Proposer retry: inflight proposals that never committed fall back
+        # through the classic forward path.
+        for eid, prop in list(self.inflight.items()):
+            if eid in self._entry_index:
+                del self.inflight[eid]
+                continue
+            if not prop.fell_back and now - prop.started_at > timeout:
+                prop.fell_back = True
+                if self.metrics is not None:
+                    self.metrics.fell_back(eid, now)
+                if self.leader_id is not None and self.leader_id != self.id:
+                    out.append(
+                        (
+                            self.leader_id,
+                            ForwardOperation(term=self.term, src=self.id,
+                                             command=prop.command, entry_id=eid),
+                        )
+                    )
+                elif self.role is Role.LEADER:
+                    out += super()._leader_append(prop.command, eid, now)
+            elif prop.fell_back and now - prop.started_at > 6 * timeout:
+                del self.inflight[eid]  # give up; client-level retry
+        return out
+
+    # ----------------------------------------------- election & recovery
+
+    def _tentative_tail(self) -> Optional[dict]:
+        return {
+            i: (s.entry.clone(), s.state.value) for i, s in self.fast_slots.items()
+        }
+
+    def _on_leadership_acquired(self, now: float) -> Outputs:
+        """Recover possibly-fast-committed entries from the election quorum.
+
+        Must-adopt entries (count >= fq + R - M in the R granted tails) are
+        re-adopted at their ORIGINAL slot index, overwriting uncommitted
+        classic entries if present (a committed conflicting classic entry at
+        the same index is impossible — see module docstring). Gaps below a
+        must-adopt index that cannot be filled prove the entry never
+        committed, so it is appended at the next free index instead.
+        """
+        replies = [r for r in self.votes_received.values() if r.vote_granted]
+        tails = [r.tentative_tail or {} for r in replies]
+        must_threshold = max(1, fast_quorum(self.m) + len(replies) - self.m)
+
+        counts: Dict[int, Dict[EntryId, int]] = {}
+        entries: Dict[EntryId, Entry] = {}
+        for tail in tails:
+            for index, (entry, _state) in tail.items():
+                counts.setdefault(index, {})
+                counts[index][entry.entry_id] = counts[index].get(entry.entry_id, 0) + 1
+                entries.setdefault(entry.entry_id, entry)
+
+        must: List[Tuple[int, EntryId]] = []
+        maybe: List[EntryId] = []
+        for index in sorted(counts):
+            ranked = sorted(counts[index].items(), key=lambda kv: (-kv[1], str(kv[0])))
+            top_eid, top_n = ranked[0]
+            if top_n >= must_threshold:
+                must.append((index, top_eid))
+                ranked = ranked[1:]
+            if self.readopt_uncommitted:
+                maybe.extend(eid for eid, _ in ranked)
+
+        displaced: List[Entry] = []
+        for index, eid in must:
+            e = entries[eid]
+            if eid in self._entry_index:
+                continue
+            if index <= self.last_log_index():
+                cur = self.slot(index)
+                if cur.entry.same_entry(e):
+                    continue
+                # Overwrite an uncommitted classic entry at the original slot.
+                assert index > self.commit_index, "would overwrite a committed slot"
+                displaced.extend(
+                    s.entry for s in self.log[index - 1 :]
+                    if s.state is SlotState.CLASSIC
+                )
+                self._truncate_from(index)
+            # Append at original index when contiguous; otherwise the gap
+            # proves non-commitment and next-free-index placement is safe.
+            e2 = Entry(term=self.term, command=e.command, entry_id=eid,
+                       proposed_at=e.proposed_at)
+            self._append_slot(Slot(e2, SlotState.CLASSIC))
+            self._count("recovered_fast_entries")
+
+        out: Outputs = []
+        for e in displaced:
+            if e.entry_id not in self._entry_index:
+                out += super()._leader_append(e.command, e.entry_id, now)
+        if self.readopt_uncommitted:
+            for eid in maybe:
+                if eid not in self._entry_index:
+                    e = entries[eid]
+                    out += super()._leader_append(e.command, eid, now)
+        # The new leader's log is now authoritative; clear the overlay and
+        # stale tallies from previous terms.
+        self.fast_slots.clear()
+        self.tallies.clear()
+        self._finalized_held.clear()
+        self._count("recoveries")
+        return out
+
+    # ------------------------------------------- classic-track interactions
+
+    def _handle_AppendEntriesArgs(self, msg: AppendEntriesArgs, now: float) -> Outputs:
+        out = super()._handle_AppendEntriesArgs(msg, now)
+        # Reconcile the overlay with newly-arrived authoritative entries:
+        # overlay slots at indexes the log now owns are dead (the classic
+        # track won); displaced inflight proposals re-route via timeout.
+        for index in list(self.fast_slots.keys()):
+            if index <= self.last_log_index():
+                del self.fast_slots[index]
+                self._finalized_held.pop(index, None)
+        self._merge_finalized(now)
+        return out
+
+    def restart(self, now: float) -> None:
+        # fast_slots (and the durable votes they imply) persist across
+        # crashes; leader tallies and proposer inflight state are volatile.
+        super().restart(now)
+        self.tallies = {}
+        self.inflight = {}
+        self._finalized_held = {}

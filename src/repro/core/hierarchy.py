@@ -1,0 +1,251 @@
+"""Hierarchical consensus: per-pod groups + a global tier of pod leaders.
+
+This is the model of the underlying Fast Raft paper (Castiglia, Goldberg &
+Patterson): the network is organized into *clusters* — here, TPU pods — each
+running consensus locally over fast links (ICI-adjacent hosts, ~0.5 ms);
+cluster leaders form an upper tier over slow links (inter-pod DCN, ~10 ms)
+for global agreement. Membership in the global tier is *logical*: member
+identity is the pod id, while the physical host serving it is whichever host
+currently leads the pod — so pod-leader churn is invisible to the global
+group's membership, which is exactly how the paper handles dynamic networks.
+
+Availability coupling: while a pod has no local leader (election in
+progress, partition, crash storm), its global member is unreachable — global
+messages to it are dropped, and the global tier rides through via its own
+quorums. The global member's persistent state is modeled as surviving leader
+migration; in a deployment it is replicated through the pod's local log
+(every state mutation of the global member is a local log entry), which the
+local consensus layer makes durable — see DESIGN.md.
+
+Down-propagation: when the global tier commits an entry, each pod's member
+injects a shadow entry into the pod's local log so every host learns the
+global decision through local (cheap) consensus.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.fast_raft import FastRaftNode
+from repro.core.metrics import Recorder
+from repro.core.raft import RaftConfig, RaftNode
+from repro.core.sim import Cluster, LinkModel, Simulation
+from repro.core.types import Entry, EntryId, Message, NodeId
+
+GLOBAL_SHADOW_PREFIX = "__global__:"
+
+
+class HierarchicalCluster:
+    def __init__(
+        self,
+        n_pods: int = 2,
+        hosts_per_pod: int = 3,
+        protocol: str = "fastraft",
+        seed: int = 0,
+        local_loss: float = 0.0,
+        local_latency: float = 0.5,
+        global_loss: float = 0.0,
+        global_latency: float = 10.0,
+        jitter: float = 0.0,
+        tick_interval: float = 10.0,
+        config: Optional[RaftConfig] = None,
+        global_config: Optional[RaftConfig] = None,
+    ):
+        self.sim = Simulation(seed)
+        self.protocol = protocol
+        self.pod_ids = [f"pod{i}" for i in range(n_pods)]
+        self.global_link = LinkModel(global_loss, global_latency, jitter)
+        self.global_metrics = Recorder()
+        self.tick_interval = tick_interval
+
+        # Local tiers: one Cluster per pod, sharing the one simulation.
+        self.pods: Dict[str, Cluster] = {}
+        for pi, pod in enumerate(self.pod_ids):
+            self.pods[pod] = Cluster(
+                n=hosts_per_pod,
+                protocol=protocol,
+                seed=seed * 7919 + pi,
+                loss=local_loss,
+                base_latency=local_latency,
+                jitter=jitter,
+                config=config,
+                tick_interval=tick_interval,
+                node_prefix=f"{pod}h",
+                sim=self.sim,
+            )
+
+        # Global tier: one logical member per pod.
+        cls = FastRaftNode if protocol == "fastraft" else RaftNode
+        gcfg = global_config or RaftConfig(
+            election_timeout_min=400.0,
+            election_timeout_max=800.0,
+            heartbeat_interval=150.0,
+            fast_vote_timeout=300.0,
+        )
+        self.global_nodes: Dict[str, RaftNode] = {}
+        for pi, pod in enumerate(self.pod_ids):
+            n = cls(pod, self.pod_ids, config=RaftConfig(**vars(gcfg)),
+                    seed=seed * 104729 + pi,
+                    apply_fn=self._make_global_apply(pod))
+            n.metrics = self.global_metrics
+            self.global_nodes[pod] = n
+        for pod, n in self.global_nodes.items():
+            n.start(self.sim.now)
+            self._schedule_global_tick(pod)
+
+        # Delivered global commands per pod (via local shadow entries).
+        self.delivered: Dict[str, List[Any]] = {p: [] for p in self.pod_ids}
+        for pod in self.pod_ids:
+            self._hook_local_apply(pod)
+
+    # --------------------------------------------------------- global plumbing
+
+    def pod_available(self, pod: str) -> bool:
+        """A pod's global member is reachable iff the pod has a live leader."""
+        return self.pods[pod].leader() is not None
+
+    def _schedule_global_tick(self, pod: str) -> None:
+        def tick():
+            n = self.global_nodes[pod]
+            if n.alive and self.pod_available(pod):
+                self._global_dispatch(pod, n.on_tick(self.sim.now))
+            self._schedule_global_tick(pod)
+
+        self.sim.schedule(self.tick_interval, tick)
+
+    def _global_dispatch(self, src: str, outputs: Sequence[Tuple[NodeId, Message]]) -> None:
+        for dst, msg in outputs:
+            self._global_send(src, dst, msg)
+
+    def _global_send(self, src: str, dst: str, msg: Message) -> None:
+        if dst not in self.global_nodes:
+            return
+        if self.global_link.loss > 0 and self.sim.rng.random() < self.global_link.loss:
+            self.global_metrics.count("dropped")
+            return
+        delay = self.global_link.sample_latency(self.sim.rng)
+
+        def deliver():
+            n = self.global_nodes.get(dst)
+            if n is not None and n.alive and self.pod_available(dst):
+                self._global_dispatch(dst, n.on_message(msg, self.sim.now))
+
+        self.sim.schedule(delay, deliver)
+
+    # ------------------------------------------------------ down-propagation
+
+    def _make_global_apply(self, pod: str) -> Callable[[int, Entry], None]:
+        def on_apply(index: int, entry: Entry) -> None:
+            # Globally committed: disseminate into this pod's local log.
+            local = self.pods[pod]
+            lead = local.leader()
+            cmd = f"{GLOBAL_SHADOW_PREFIX}{index}:{entry.command}"
+            if lead is not None:
+                node = local.nodes[lead]
+                eid = EntryId(f"{pod}-global", index)
+                local.dispatch(
+                    lead, node.client_request(cmd, self.sim.now, entry_id=eid)
+                )
+
+        return on_apply
+
+    def _hook_local_apply(self, pod: str) -> None:
+        local = self.pods[pod]
+
+        def on_apply(index: int, entry: Entry, _pod=pod) -> None:
+            cmd = entry.command
+            if isinstance(cmd, str) and cmd.startswith(GLOBAL_SHADOW_PREFIX):
+                self.delivered[_pod].append(cmd[len(GLOBAL_SHADOW_PREFIX):])
+
+        # Register on every host (first local apply wins for `delivered`).
+        seen = set()
+
+        def dedup_apply(index: int, entry: Entry, _pod=pod) -> None:
+            key = (index, str(entry.entry_id))
+            if key in seen:
+                return
+            seen.add(key)
+            on_apply(index, entry)
+
+        for node in local.nodes.values():
+            node.apply_fn = dedup_apply
+
+    # ------------------------------------------------------------- workload
+
+    def bootstrap(self, max_time: float = 20_000.0) -> None:
+        """Run until every pod has a local leader and the global tier elected."""
+
+        def ready() -> bool:
+            return all(self.pods[p].leader() is not None for p in self.pod_ids) and (
+                self.global_leader() is not None
+            )
+
+        self.sim.run_until(self.sim.now + max_time, stop=ready)
+        assert ready(), "hierarchy failed to bootstrap"
+
+    def global_leader(self) -> Optional[str]:
+        leaders = [
+            pod
+            for pod, n in self.global_nodes.items()
+            if n.alive and n.role.value == "leader" and self.pod_available(pod)
+        ]
+        if not leaders:
+            return None
+        return max(leaders, key=lambda p: self.global_nodes[p].term)
+
+    def propose_global(self, command: Any, via_pod: Optional[str] = None) -> EntryId:
+        via_pod = via_pod or self.pod_ids[0]
+        n = self.global_nodes[via_pod]
+        eid = EntryId(via_pod, n.next_seq())
+        self._global_dispatch(via_pod, n.client_request(command, self.sim.now, entry_id=eid))
+        return eid
+
+    def run(self, duration: float, stop=None) -> None:
+        self.sim.run_until(self.sim.now + duration, stop)
+
+    def run_until_globally_committed(
+        self, entry_ids: Sequence[EntryId], max_time: float = 30_000.0
+    ) -> bool:
+        def done() -> bool:
+            return all(
+                self.global_metrics.traces.get(e) is not None
+                and self.global_metrics.traces[e].committed
+                for e in entry_ids
+            )
+
+        self.sim.run_until(self.sim.now + max_time, stop=done)
+        return done()
+
+    def run_until_delivered(self, n_cmds: int, max_time: float = 60_000.0) -> bool:
+        def done() -> bool:
+            return all(len(self.delivered[p]) >= n_cmds for p in self.pod_ids)
+
+        self.sim.run_until(self.sim.now + max_time, stop=done)
+        return done()
+
+    # ----------------------------------------------------------------- chaos
+
+    def crash_pod_leader(self, pod: str) -> Optional[str]:
+        lead = self.pods[pod].leader()
+        if lead is not None:
+            self.pods[pod].crash(lead)
+        return lead
+
+    def partition_pod(self, pod: str) -> None:
+        """Cut the pod's global member off (simulates inter-pod link failure)
+        by marking its global node dead to the network via 100% loss."""
+        self.global_nodes[pod].alive = False
+
+    def heal_pod(self, pod: str) -> None:
+        self.global_nodes[pod].alive = True
+        self.global_nodes[pod].restart(self.sim.now)
+
+    def check_consistency(self) -> None:
+        for pod in self.pod_ids:
+            self.pods[pod].check_log_consistency()
+        # Global delivered sequences must be prefix-compatible across pods.
+        seqs = list(self.delivered.values())
+        for i in range(len(seqs)):
+            for j in range(i + 1, len(seqs)):
+                a, b = seqs[i], seqs[j]
+                k = min(len(a), len(b))
+                assert a[:k] == b[:k], f"global delivery divergence: {a[:k]} vs {b[:k]}"

@@ -1,0 +1,125 @@
+"""Commit-latency / message-round accounting for consensus experiments.
+
+The paper measures (a) average commit latency under varying random packet
+loss (Figure 1) and (b) — from the original Fast Raft paper — the average
+number of message rounds to commit. We record per-entry lifecycle events and
+derive both: in a loss-free constant-latency network, rounds-to-commit is
+exactly ``latency / one_way_delay``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+from repro.core.types import Entry, EntryId, NodeId
+
+
+@dataclasses.dataclass
+class EntryTrace:
+    entry_id: EntryId
+    submitted_at: float = -1.0
+    mode: str = "?"            # "fast" | "classic" at submission time
+    fallbacks: int = 0
+    first_commit_at: float = -1.0
+    committed_index: int = -1
+
+    @property
+    def committed(self) -> bool:
+        return self.first_commit_at >= 0
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.committed and self.submitted_at >= 0:
+            return self.first_commit_at - self.submitted_at
+        return None
+
+
+class Recorder:
+    def __init__(self) -> None:
+        self.traces: Dict[EntryId, EntryTrace] = {}
+        self.counters: Dict[str, int] = {}
+        # node -> list[(index, entry_id)] in apply order, for invariants.
+        self.applied: Dict[NodeId, List] = {}
+        # Safety invariants enforced online:
+        self.committed_at: Dict[int, EntryId] = {}   # commit safety
+        self.leaders: Dict[int, set] = {}            # election safety
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def submitted(self, entry_id: EntryId, now: float, mode: str) -> None:
+        t = self.traces.setdefault(entry_id, EntryTrace(entry_id))
+        if t.submitted_at < 0:
+            t.submitted_at = now
+            t.mode = mode
+
+    def fell_back(self, entry_id: EntryId, now: float) -> None:
+        t = self.traces.setdefault(entry_id, EntryTrace(entry_id))
+        t.fallbacks += 1
+
+    def committed(self, node_id: NodeId, index: int, entry: Entry, now: float) -> None:
+        # COMMIT SAFETY (State Machine Safety): once any node applies entry e
+        # at index i, no node may ever apply a different entry at i.
+        prev = self.committed_at.get(index)
+        if prev is not None and prev != entry.entry_id:
+            raise AssertionError(
+                f"COMMIT SAFETY VIOLATION at index {index}: "
+                f"{prev} already applied, {entry.entry_id} now applied by {node_id}"
+            )
+        self.committed_at[index] = entry.entry_id
+        t = self.traces.setdefault(entry.entry_id, EntryTrace(entry.entry_id))
+        if t.first_commit_at < 0:
+            t.first_commit_at = now
+            t.committed_index = index
+        self.applied.setdefault(node_id, []).append((index, entry.entry_id))
+
+    def leader_elected(self, node_id: NodeId, term: int) -> None:
+        # ELECTION SAFETY: at most one leader per term.
+        s = self.leaders.setdefault(term, set())
+        s.add(node_id)
+        if len(s) > 1:
+            raise AssertionError(f"ELECTION SAFETY VIOLATION in term {term}: {sorted(s)}")
+
+    def count(self, kind: str, n: int = 1) -> None:
+        self.counters[kind] = self.counters.get(kind, 0) + n
+
+    # -- queries -----------------------------------------------------------
+
+    def latencies(self, mode: Optional[str] = None) -> List[float]:
+        return [
+            t.latency
+            for t in self.traces.values()
+            if t.latency is not None and (mode is None or t.mode == mode)
+        ]
+
+    def commit_rate(self) -> float:
+        subs = [t for t in self.traces.values() if t.submitted_at >= 0]
+        if not subs:
+            return 1.0
+        return sum(1 for t in subs if t.committed) / len(subs)
+
+    def mean_latency(self, mode: Optional[str] = None) -> Optional[float]:
+        ls = self.latencies(mode)
+        return statistics.fmean(ls) if ls else None
+
+    def p99_latency(self) -> Optional[float]:
+        ls = sorted(self.latencies())
+        if not ls:
+            return None
+        return ls[min(len(ls) - 1, int(0.99 * len(ls)))]
+
+    def fallback_fraction(self) -> float:
+        fast = [t for t in self.traces.values() if t.mode == "fast"]
+        if not fast:
+            return 0.0
+        return sum(1 for t in fast if t.fallbacks > 0) / len(fast)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n_committed": float(len(self.latencies())),
+            "commit_rate": self.commit_rate(),
+            "mean_latency": self.mean_latency() or float("nan"),
+            "p99_latency": self.p99_latency() or float("nan"),
+            "fallback_fraction": self.fallback_fraction(),
+            **{k: float(v) for k, v in self.counters.items()},
+        }

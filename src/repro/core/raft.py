@@ -1,0 +1,514 @@
+"""Classic Raft (Ongaro & Ousterhout 2014), event-driven and transport-free.
+
+A node never touches a socket or a clock: the harness (``repro.core.sim`` in
+CI, a gRPC shim in production) delivers messages via :meth:`on_message`,
+drives time via :meth:`on_tick`, and sends whatever list of ``(dst, msg)``
+pairs a handler returns. This is what makes hypothesis-driven schedule
+exploration possible: every interleaving the simulator can produce is a real
+execution of the node code.
+
+The class is written to be subclassed by :class:`repro.core.fast_raft.
+FastRaftNode`; the hooks it overrides are marked ``# FastRaft hook``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.types import (
+    AppendEntriesArgs,
+    AppendEntriesReply,
+    ClientReply,
+    Entry,
+    EntryId,
+    ForwardOperation,
+    Message,
+    NodeId,
+    RequestVoteArgs,
+    RequestVoteReply,
+    Role,
+    Slot,
+    SlotState,
+    majority,
+)
+
+Outputs = List[Tuple[NodeId, Message]]
+
+CONFIG_PREFIX = "__config__:"  # membership-change commands
+
+
+@dataclasses.dataclass
+class RaftConfig:
+    election_timeout_min: float = 150.0
+    election_timeout_max: float = 300.0
+    heartbeat_interval: float = 50.0
+    # Fast Raft only (kept here so one config type serves both protocols):
+    fast_track: bool = False
+    fast_vote_timeout: float = 120.0  # slot falls back to classic after this
+    max_fast_inflight: int = 64
+
+
+class RaftNode:
+    """One Raft participant. Deterministic given (config, seed, schedule)."""
+
+    def __init__(
+        self,
+        node_id: NodeId,
+        members: List[NodeId],
+        config: Optional[RaftConfig] = None,
+        seed: int = 0,
+        apply_fn: Optional[Callable[[int, Entry], None]] = None,
+    ):
+        self.id = node_id
+        self.members: List[NodeId] = list(members)
+        self.config = config or RaftConfig()
+        # crc32, NOT hash(): string hashing is randomized per process and
+        # would silently break cross-process determinism of every sim.
+        self.rng = random.Random(zlib.crc32(node_id.encode()) ^ (seed * 2654435761 % 2**32))
+        self.apply_fn = apply_fn
+
+        # Persistent state.
+        self.term = 0
+        self.voted_for: Optional[NodeId] = None
+        self.log: List[Slot] = []  # log[p] holds index p+1
+
+        # Volatile state.
+        self.role = Role.FOLLOWER
+        self.commit_index = 0
+        self.last_applied = 0
+        self.leader_id: Optional[NodeId] = None
+
+        # Leader state.
+        self.next_index: Dict[NodeId, int] = {}
+        self.match_index: Dict[NodeId, int] = {}
+
+        # Candidate state.
+        self.votes_received: Dict[NodeId, RequestVoteReply] = {}
+
+        # Timers (absolute sim times).
+        self.election_deadline = 0.0
+        self.next_heartbeat = 0.0
+
+        # Dedup / bookkeeping.
+        self._entry_index: Dict[EntryId, int] = {}
+        self._pending_client: List[Tuple[Any, EntryId]] = []  # no-leader queue
+        self._seq = 0
+        self.alive = True
+        self.metrics = None  # injected by the harness (core.metrics.Recorder)
+
+    # ---------------------------------------------------------------- util
+
+    @property
+    def m(self) -> int:
+        return len(self.members)
+
+    def quorum(self) -> int:
+        return majority(self.m)
+
+    def last_log_index(self) -> int:
+        return len(self.log)
+
+    def term_at(self, index: int) -> int:
+        if index == 0:
+            return 0
+        return self.log[index - 1].entry.term
+
+    def slot(self, index: int) -> Optional[Slot]:
+        if 1 <= index <= len(self.log):
+            return self.log[index - 1]
+        return None
+
+    def peers(self) -> List[NodeId]:
+        return [n for n in self.members if n != self.id]
+
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _count(self, kind: str, n: int = 1) -> None:
+        if self.metrics is not None:
+            self.metrics.count(kind, n)
+
+    # ------------------------------------------------------ election state
+
+    def _reset_election_timer(self, now: float) -> None:
+        c = self.config
+        self.election_deadline = now + self.rng.uniform(
+            c.election_timeout_min, c.election_timeout_max
+        )
+
+    def _become_follower(self, term: int, now: float) -> None:
+        if term > self.term:
+            self.term = term
+            self.voted_for = None
+        self.role = Role.FOLLOWER
+        self.votes_received = {}
+        self._reset_election_timer(now)
+
+    def _become_candidate(self, now: float) -> Outputs:
+        self.term += 1
+        self.role = Role.CANDIDATE
+        self.voted_for = self.id
+        self.leader_id = None
+        self.votes_received = {}
+        self._reset_election_timer(now)
+        self._count("elections")
+        lli, llt = self._election_log_position()
+        args = RequestVoteArgs(
+            term=self.term,
+            src=self.id,
+            candidate_id=self.id,
+            last_log_index=lli,
+            last_log_term=llt,
+        )
+        # Vote for self (record a synthetic reply so recovery sees our tail).
+        self.votes_received[self.id] = RequestVoteReply(
+            term=self.term,
+            src=self.id,
+            vote_granted=True,
+            tentative_tail=self._tentative_tail(),
+            last_log_index=self.last_log_index(),
+        )
+        out: Outputs = [(p, args) for p in self.peers()]
+        return out + self._maybe_win_election(now)
+
+    def _become_leader(self, now: float) -> Outputs:
+        self.role = Role.LEADER
+        self.leader_id = self.id
+        self.next_index = {p: self.last_log_index() + 1 for p in self.peers()}
+        self.match_index = {p: 0 for p in self.peers()}
+        self.next_heartbeat = now  # fire immediately
+        self._count("leader_elected")
+        if self.metrics is not None:
+            self.metrics.leader_elected(self.id, self.term)
+        out = self._on_leadership_acquired(now)  # FastRaft hook (recovery)
+        out += self._flush_pending(now)
+        return out + self._broadcast_append_entries(now)
+
+    def _maybe_win_election(self, now: float) -> Outputs:
+        grants = sum(1 for r in self.votes_received.values() if r.vote_granted)
+        if self.role is Role.CANDIDATE and grants >= self.quorum():
+            return self._become_leader(now)
+        return []
+
+    # ---- Hooks overridden by FastRaftNode -------------------------------
+
+    def _election_log_position(self) -> Tuple[int, int]:
+        """(last_log_index, last_log_term) used in up-to-dateness checks.
+
+        FastRaft hook: tentative fast-track slots are *excluded* there —
+        they are recovered by the new leader from vote replies instead.
+        """
+        return self.last_log_index(), self.term_at(self.last_log_index())
+
+    def _tentative_tail(self) -> Optional[dict]:
+        return None  # FastRaft hook
+
+    def _on_leadership_acquired(self, now: float) -> Outputs:
+        return []  # FastRaft hook: slot recovery
+
+    def _on_slot_overwritten(self, index: int, old: Slot, new: Slot) -> None:
+        pass  # FastRaft hook: re-propose displaced commands
+
+    # --------------------------------------------------------------- ticks
+
+    def start(self, now: float) -> None:
+        self._reset_election_timer(now)
+
+    def on_tick(self, now: float) -> Outputs:
+        if not self.alive:
+            return []
+        out: Outputs = []
+        if self.role is Role.LEADER:
+            if now >= self.next_heartbeat:
+                self.next_heartbeat = now + self.config.heartbeat_interval
+                out += self._broadcast_append_entries(now)
+        elif now >= self.election_deadline:
+            out += self._become_candidate(now)
+        out += self._tick_protocol(now)  # FastRaft hook (fast-slot timeouts)
+        return out
+
+    def _tick_protocol(self, now: float) -> Outputs:
+        return []
+
+    # ------------------------------------------------------------ messages
+
+    def on_message(self, msg: Message, now: float) -> Outputs:
+        if not self.alive:
+            return []
+        self._count("msgs_in")
+        if msg.term > self.term:
+            self._become_follower(msg.term, now)
+        handler = getattr(self, f"_handle_{type(msg).__name__}", None)
+        if handler is None:
+            return []
+        return handler(msg, now)
+
+    # -- RequestVote
+
+    def _handle_RequestVoteArgs(self, msg: RequestVoteArgs, now: float) -> Outputs:
+        grant = False
+        if msg.term >= self.term:
+            lli, llt = self._election_log_position()
+            up_to_date = (msg.last_log_term, msg.last_log_index) >= (llt, lli)
+            if up_to_date and self.voted_for in (None, msg.candidate_id):
+                grant = True
+                self.voted_for = msg.candidate_id
+                self._reset_election_timer(now)
+        reply = RequestVoteReply(
+            term=self.term,
+            src=self.id,
+            vote_granted=grant,
+            tentative_tail=self._tentative_tail() if grant else None,
+            last_log_index=self.last_log_index(),
+        )
+        return [(msg.src, reply)]
+
+    def _handle_RequestVoteReply(self, msg: RequestVoteReply, now: float) -> Outputs:
+        if self.role is not Role.CANDIDATE or msg.term < self.term:
+            return []
+        self.votes_received[msg.src] = msg
+        return self._maybe_win_election(now)
+
+    # -- AppendEntries
+
+    def _broadcast_append_entries(self, now: float) -> Outputs:
+        out: Outputs = []
+        for p in self.peers():
+            out.append((p, self._make_append_entries(p)))
+        self._count("msgs_out", len(out))
+        return out
+
+    def _make_append_entries(self, peer: NodeId) -> AppendEntriesArgs:
+        ni = self.next_index.get(peer, self.last_log_index() + 1)
+        prev = ni - 1
+        entries = tuple(s.clone() for s in self.log[prev : prev + 64])
+        return AppendEntriesArgs(
+            term=self.term,
+            src=self.id,
+            leader_id=self.id,
+            prev_log_index=prev,
+            prev_log_term=self.term_at(prev),
+            entries=entries,
+            leader_commit=self.commit_index,
+        )
+
+    def _handle_AppendEntriesArgs(self, msg: AppendEntriesArgs, now: float) -> Outputs:
+        if msg.term < self.term:
+            return [(msg.src, AppendEntriesReply(term=self.term, src=self.id))]
+        # Valid leader for this term.
+        first_leader_contact = self.leader_id != msg.leader_id
+        self.leader_id = msg.leader_id
+        if self.role is not Role.FOLLOWER:
+            self._become_follower(msg.term, now)
+        self._reset_election_timer(now)
+        deferred: Outputs = self._flush_pending(now) if first_leader_contact else []
+
+        # Consistency check. Tentative slots don't count as matching history:
+        # only CLASSIC/FINALIZED slots anchor prev_log_term.
+        if msg.prev_log_index > 0:
+            s = self.slot(msg.prev_log_index)
+            if s is None or (
+                s.entry.term != msg.prev_log_term and s.state is not SlotState.TENTATIVE
+            ) or (s.state is SlotState.TENTATIVE):
+                # A tentative slot at prev is not authoritative history; ask
+                # the leader to back up and ship it classically.
+                return deferred + [
+                    (
+                        msg.src,
+                        AppendEntriesReply(
+                            term=self.term, src=self.id, success=False, match_index=0
+                        ),
+                    )
+                ]
+        # Append / overwrite.
+        for k, incoming in enumerate(msg.entries):
+            idx = msg.prev_log_index + 1 + k
+            cur = self.slot(idx)
+            if cur is not None and cur.entry.term == incoming.entry.term and cur.entry.same_entry(incoming.entry):
+                # Matching entry: possibly upgrade state (tentative->classic).
+                if cur.state is SlotState.TENTATIVE:
+                    cur.state = incoming.state
+                continue
+            if cur is not None:
+                # Conflict: truncate from idx (Raft rule), after notifying.
+                self._on_slot_overwritten(idx, cur, incoming)
+                self._truncate_from(idx)
+            self._append_slot(incoming.clone())
+        if msg.leader_commit > self.commit_index:
+            self._advance_commit(min(msg.leader_commit, self._durable_prefix()), now)
+        reply = AppendEntriesReply(
+            term=self.term,
+            src=self.id,
+            success=True,
+            match_index=msg.prev_log_index + len(msg.entries),
+        )
+        return deferred + [(msg.src, reply)]
+
+    def _handle_AppendEntriesReply(self, msg: AppendEntriesReply, now: float) -> Outputs:
+        if self.role is not Role.LEADER or msg.term < self.term:
+            return []
+        if msg.success:
+            self.match_index[msg.src] = max(self.match_index.get(msg.src, 0), msg.match_index)
+            self.next_index[msg.src] = self.match_index[msg.src] + 1
+            return self._leader_advance_commit(now)
+        # Back up (simple decrement; fine at sim scale).
+        self.next_index[msg.src] = max(1, self.next_index.get(msg.src, 1) - 8)
+        return [(msg.src, self._make_append_entries(msg.src))]
+
+    # -- client path
+
+    def client_request(
+        self, command: Any, now: float, entry_id: Optional[EntryId] = None
+    ) -> Outputs:
+        """Entry point for a client command submitted at this node."""
+        if not self.alive:
+            return []
+        entry_id = entry_id or EntryId(self.id, self.next_seq())
+        if entry_id in self._entry_index:
+            return []  # duplicate retry
+        if self.metrics is not None:
+            self.metrics.submitted(entry_id, now, mode=self._submit_mode())
+        if self.role is Role.LEADER:
+            return self._leader_append(command, entry_id, now)
+        return self._non_leader_submit(command, entry_id, now)
+
+    def _submit_mode(self) -> str:
+        return "classic"  # FastRaft hook
+
+    def _non_leader_submit(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
+        # Classic track: forward to the last known leader. FastRaft overrides.
+        if self.leader_id is not None and self.leader_id != self.id:
+            fwd = ForwardOperation(
+                term=self.term, src=self.id, command=command, entry_id=entry_id
+            )
+            self._count("forwards")
+            return [(self.leader_id, fwd)]
+        # No leader known yet: queue and flush once one is discovered.
+        self._pending_client.append((command, entry_id))
+        return []
+
+    def _flush_pending(self, now: float) -> Outputs:
+        if not self._pending_client:
+            return []
+        pending, self._pending_client = self._pending_client, []
+        out: Outputs = []
+        for command, entry_id in pending:
+            if entry_id in self._entry_index:
+                continue
+            if self.role is Role.LEADER:
+                out += self._leader_append(command, entry_id, now)
+            else:
+                out += self._non_leader_submit(command, entry_id, now)
+        return out
+
+    def _handle_ForwardOperation(self, msg: ForwardOperation, now: float) -> Outputs:
+        if self.role is not Role.LEADER:
+            if self.leader_id and self.leader_id != self.id:
+                return [(self.leader_id, msg)]  # re-forward
+            return []
+        return self._leader_append(msg.command, msg.entry_id, now)
+
+    def _leader_append(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
+        if entry_id in self._entry_index:
+            return []
+        e = Entry(term=self.term, command=command, entry_id=entry_id, proposed_at=now)
+        self._append_slot(Slot(e, SlotState.CLASSIC))
+        self._count("proposals")
+        # Replicate immediately (don't wait for the heartbeat).
+        return self._broadcast_append_entries(now)
+
+    # ---------------------------------------------------------- log & commit
+
+    def _append_slot(self, s: Slot) -> None:
+        self.log.append(s)
+        self._entry_index[s.entry.entry_id] = len(self.log)
+
+    def _truncate_from(self, index: int) -> None:
+        for p in range(index - 1, len(self.log)):
+            self._entry_index.pop(self.log[p].entry.entry_id, None)
+        del self.log[index - 1 :]
+
+    def _durable_prefix(self) -> int:
+        """Largest index i such that slots 1..i are all non-tentative."""
+        i = 0
+        for s in self.log:
+            if s.state is SlotState.TENTATIVE:
+                break
+            i += 1
+        return i
+
+    def _leader_advance_commit(self, now: float) -> Outputs:
+        # Largest N replicated on a majority with term == current term.
+        for n in range(self.last_log_index(), self.commit_index, -1):
+            s = self.slot(n)
+            if s.state is SlotState.TENTATIVE or self.term_at(n) != self.term:
+                continue
+            votes = 1 + sum(1 for p in self.peers() if self.match_index.get(p, 0) >= n)
+            if votes >= self.quorum():
+                self._advance_commit(n, now)
+                break
+        return []
+
+    def _advance_commit(self, new_commit: int, now: float) -> None:
+        new_commit = min(new_commit, self._durable_prefix())
+        if new_commit <= self.commit_index:
+            return
+        self.commit_index = new_commit
+        while self.last_applied < self.commit_index:
+            self.last_applied += 1
+            s = self.slot(self.last_applied)
+            self._apply(self.last_applied, s.entry, now)
+
+    def _apply(self, index: int, entry: Entry, now: float) -> None:
+        cmd = entry.command
+        if isinstance(cmd, str) and cmd.startswith(CONFIG_PREFIX):
+            self._apply_config(cmd)
+        if self.metrics is not None:
+            self.metrics.committed(self.id, index, entry, now)
+        if self.apply_fn is not None:
+            self.apply_fn(index, entry)
+
+    # ------------------------------------------------------------ membership
+
+    def _apply_config(self, cmd: str) -> None:
+        new_members = sorted(cmd[len(CONFIG_PREFIX):].split(","))
+        self.members = new_members
+        if self.role is Role.LEADER:
+            for p in self.peers():
+                self.next_index.setdefault(p, self.last_log_index() + 1)
+                self.match_index.setdefault(p, 0)
+            self.next_index = {p: self.next_index[p] for p in self.peers()}
+            self.match_index = {p: self.match_index[p] for p in self.peers()}
+
+    @staticmethod
+    def config_command(members: List[NodeId]) -> str:
+        return CONFIG_PREFIX + ",".join(sorted(members))
+
+    # --------------------------------------------------------------- debug
+
+    def committed_commands(self) -> List[Any]:
+        return [self.log[i].entry.command for i in range(self.commit_index)]
+
+    def log_summary(self) -> List[Tuple[int, str, str]]:
+        return [
+            (s.entry.term, str(s.entry.entry_id), s.state.value) for s in self.log
+        ]
+
+    def crash(self) -> None:
+        self.alive = False
+
+    def restart(self, now: float) -> None:
+        """Crash-recovery: persistent state (term, voted_for, log) survives;
+        volatile state resets."""
+        self.alive = True
+        self.role = Role.FOLLOWER
+        self.leader_id = None
+        self.votes_received = {}
+        self.next_index = {}
+        self.match_index = {}
+        self.commit_index = 0
+        self.last_applied = 0
+        self._reset_election_timer(now)

@@ -1,0 +1,200 @@
+"""Core protocol types shared by Raft and Fast Raft.
+
+Terminology follows the Raft paper (Ongaro & Ousterhout, 2014) and the Fast
+Raft description (Castiglia, Goldberg & Patterson, 2020; SebaRaj & Melnychuk,
+2025 implementation paper):
+
+- A log *slot* holds at most one entry per (term, index). Under Fast Raft a
+  slot may be *tentative* (fast-track proposal awaiting a supermajority) and
+  is over-writable until finalized; classic Raft slots are append-only from
+  the leader's point of view.
+- The *fast quorum* is ceil(3M/4); the *classic quorum* is the majority
+  floor(M/2)+1. Any two fast quorums intersect in >= a majority, and any fast
+  quorum intersects any majority in >= recovery_threshold nodes, which is
+  what makes leader-side recovery of fast-committed entries sound (see
+  ``recovery_threshold``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Any, Optional, Tuple
+
+NodeId = str
+
+
+def majority(m: int) -> int:
+    """Classic Raft quorum size for a cluster of m nodes."""
+    return m // 2 + 1
+
+
+def fast_quorum(m: int) -> int:
+    """Fast-track quorum size: ceil(3M/4) (paper section 2.2)."""
+    return math.ceil(3 * m / 4)
+
+
+def recovery_threshold(m: int) -> int:
+    """Minimum multiplicity in a majority sample that identifies a possibly
+    fast-committed entry.
+
+    If an entry x fast-committed, >= fast_quorum(m) nodes hold it, so any
+    majority Q of size majority(m) contains at least
+    ``fast_quorum(m) + majority(m) - m`` holders. Two distinct entries can
+    never both reach this count within one majority because
+    2 * recovery_threshold(m) > majority(m) for all m >= 3.
+    """
+    return fast_quorum(m) + majority(m) - m
+
+
+class Role(enum.Enum):
+    FOLLOWER = "follower"
+    CANDIDATE = "candidate"
+    LEADER = "leader"
+
+
+class SlotState(enum.Enum):
+    """State of a log slot."""
+
+    CLASSIC = "classic"      # appended via leader AppendEntries (Raft authority)
+    TENTATIVE = "tentative"  # fast-track proposal, over-writable
+    FINALIZED = "finalized"  # fast-track proposal that reached ceil(3M/4)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryId:
+    """Globally unique identity of a proposed command (origin + sequence).
+
+    Used to key fast-track votes and to deduplicate client retries.
+    """
+
+    origin: NodeId
+    seq: int
+
+    def __str__(self) -> str:  # compact for logs
+        return f"{self.origin}#{self.seq}"
+
+
+@dataclasses.dataclass
+class Entry:
+    term: int
+    command: Any
+    entry_id: EntryId
+    # Bookkeeping (not part of protocol identity):
+    proposed_at: float = 0.0
+
+    def same_entry(self, other: "Entry") -> bool:
+        return self.entry_id == other.entry_id
+
+    def clone(self) -> "Entry":
+        return Entry(self.term, self.command, self.entry_id, self.proposed_at)
+
+
+@dataclasses.dataclass
+class Slot:
+    entry: Entry
+    state: SlotState
+
+    def clone(self) -> "Slot":
+        return Slot(self.entry.clone(), self.state)
+
+
+# --------------------------------------------------------------------------
+# RPC messages. Every message carries ``term`` for the standard Raft term
+# rules. Dataclasses keep the simulator transport trivially serializable.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Message:
+    term: int
+    src: NodeId = ""
+
+
+@dataclasses.dataclass
+class RequestVoteArgs(Message):
+    candidate_id: NodeId = ""
+    last_log_index: int = 0
+    last_log_term: int = 0
+
+
+@dataclasses.dataclass
+class RequestVoteReply(Message):
+    vote_granted: bool = False
+    # Fast Raft recovery: voters ship a summary of their tentative tail so a
+    # new leader can recover fast-committed entries (see
+    # FastRaftNode._recover_tentative). {index: (entry, state_name)}
+    tentative_tail: Optional[dict] = None
+    last_log_index: int = 0
+
+
+@dataclasses.dataclass
+class AppendEntriesArgs(Message):
+    leader_id: NodeId = ""
+    prev_log_index: int = 0
+    prev_log_term: int = 0
+    entries: Tuple[Slot, ...] = ()
+    leader_commit: int = 0
+
+
+@dataclasses.dataclass
+class AppendEntriesReply(Message):
+    success: bool = False
+    match_index: int = 0
+
+
+@dataclasses.dataclass
+class ForwardOperation(Message):
+    """Classic track from a non-leader: relay the command to the leader."""
+
+    command: Any = None
+    entry_id: Optional[EntryId] = None
+
+
+@dataclasses.dataclass
+class FastPropose(Message):
+    """Fast track round 1: proposer -> ALL nodes, targeting a specific slot."""
+
+    index: int = 0
+    entry: Optional[Entry] = None
+
+
+@dataclasses.dataclass
+class FastVote(Message):
+    """Fast track round 2: acceptor -> leader, voting for (index, entry_id)."""
+
+    index: int = 0
+    entry_id: Optional[EntryId] = None
+    voter: NodeId = ""
+
+
+@dataclasses.dataclass
+class FastFinalize(Message):
+    """Fast track round 3: leader -> ALL, the slot reached ceil(3M/4)."""
+
+    index: int = 0
+    entry: Optional[Entry] = None
+    leader_commit: int = 0
+
+
+@dataclasses.dataclass
+class ClientReply(Message):
+    ok: bool = False
+    entry_id: Optional[EntryId] = None
+    index: int = 0
+    leader_hint: Optional[NodeId] = None
+
+
+# Hierarchical tier (pod leaders) wraps inner messages with routing metadata.
+@dataclasses.dataclass
+class TierEnvelope(Message):
+    """Envelope for global-tier traffic routed between pod leaders.
+
+    ``member`` is the stable *pod identity* in the global group; the physical
+    host currently serving that member is resolved by the hierarchy router —
+    this is exactly the dynamic-membership trick of the paper: logical
+    membership is stable while physical hosts churn.
+    """
+
+    member: NodeId = ""
+    payload: Any = None

@@ -1,0 +1,95 @@
+"""Flash-decoding for TPU (Pallas): single-token attention against a long
+KV cache, split-K style.
+
+The sequence axis of the cache is split across the innermost grid dimension;
+each split produces a partial (acc, m, l) in fp32, written per split, and
+the splits are merged with a logsumexp combine in the jit'd wrapper (the
+merge is O(splits * D) — negligible). This mirrors flash-decoding on GPU but
+tiles for VMEM: each split streams blk_s cache rows through VMEM while the
+(H, D) query block stays resident.
+
+Layouts: q (B, H, D); k, v (B, S, H, D); kv_len (B,) valid lengths.
+Outputs: acc (B, H, nsplit, D) fp32, m/l (B, H, nsplit) fp32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                   *, scale, blk_s):
+    si = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32) * scale           # (H, D)
+    k = k_ref[0].astype(jnp.float32)                   # (blk_s, H, D)
+    v = v_ref[0].astype(jnp.float32)
+    kv_len = kvlen_ref[0]
+
+    s = jnp.einsum("hd,khd->hk", q, k)                 # (H, blk_s)
+    kpos = si * blk_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < kv_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                            # (H,)
+    # All-masked splits: exp(NEG_INF - NEG_INF) would be 1; force p to 0.
+    safe_m = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - safe_m[:, None])
+    p = jnp.where(kpos < kv_len, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("hk,khd->hd", p, v)
+    acc_ref[0, :, 0, :] = acc
+    m_ref[0, :, 0] = m
+    l_ref[0, :, 0] = l
+
+
+def decode_attention_splits(q, k, v, kv_len, *, scale=None, blk_s=512,
+                            interpret=False):
+    """Partial-attention pass. Returns (acc, m, l) per split."""
+    B, H, D = q.shape
+    S = k.shape[1]
+    assert k.shape == (B, S, H, D) and v.shape == (B, S, H, D)
+    blk_s = min(blk_s, S)
+    assert S % blk_s == 0
+    nsplit = S // blk_s
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, blk_s=blk_s)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, H, nsplit),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si: (b,)),
+            pl.BlockSpec((1, H, D), lambda b, h, si: (b, 0, 0)),
+            pl.BlockSpec((1, blk_s, H, D), lambda b, h, si: (b, si, 0, 0)),
+            pl.BlockSpec((1, blk_s, H, D), lambda b, h, si: (b, si, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, 1, D), lambda b, h, si: (b, 0, si, 0)),
+            pl.BlockSpec((1, H, 1), lambda b, h, si: (b, 0, si)),
+            pl.BlockSpec((1, H, 1), lambda b, h, si: (b, 0, si)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nsplit, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nsplit), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nsplit), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)
+    return acc, m, l
+
+
+def combine_splits(acc, m, l, out_dtype):
+    """Logsumexp merge of split partials: (B,H,ns,D),(B,H,ns)x2 -> (B,H,D)."""
+    m_glob = jnp.max(m, axis=-1, keepdims=True)               # (B,H,1)
+    w = jnp.exp(m - m_glob)                                   # (B,H,ns)
+    l_glob = jnp.sum(l * w, axis=-1)                          # (B,H)
+    o = jnp.einsum("bhsd,bhs->bhd", acc, w)
+    return (o / jnp.maximum(l_glob, 1e-30)[..., None]).astype(out_dtype)

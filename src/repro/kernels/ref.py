@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernels are validated
+against these in interpret mode (CPU) across shape/dtype sweeps; the
+dry-run lowers these FLOP-equivalent paths on the host platform."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, D) with Hq % Hkv == 0."""
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    group = Hq // Hkv
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Tq, Hkv, group, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Tq)[:, None] >= jnp.arange(Tk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale: float | None = None):
+    """Single-token decode: q (B, Hq, D); k, v (B, S, Hkv, D); kv_len (B,)."""
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    group = Hq // Hkv
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < kv_len[:, None]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,21 @@
+"""Production mesh construction. A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets the
+512-device host platform before calling it; tests and benches keep their
+single real device."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16 x 16 = 256 chips (data x model).
+    Multi-pod: 2 x 16 x 16 = 512 chips (pod x data x model) — the 'pod' axis
+    is the DCN dimension; parameters never shard over it."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate mesh for single-device tests/examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

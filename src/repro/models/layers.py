@@ -1,0 +1,384 @@
+"""Shared neural layers: norms, RoPE, GQA attention (train/prefill/decode),
+and dense FFNs. Pure functions over parameter pytrees; no framework.
+
+Conventions:
+  x:      (B, T, d_model) activations, compute dtype bf16 by default
+  params: nested dicts of jnp arrays
+  cache:  {"k": (B, S, Hkv, Dh), "v": (B, S, Hkv, Dh)} per attention layer
+Softmax/norm statistics are computed in fp32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- init utils
+
+
+def _dense_init(rng, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def _embed_init(rng, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+
+def init_norm(cfg: ArchConfig, dim: int, dtype=jnp.float32) -> Params:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm over the head dim (Qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, Dh); positions: (B, T) or (T,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def init_attention(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    r = jax.random.split(rng, 5)
+    p: Params = {
+        "wq": _dense_init(r[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": _dense_init(r[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": _dense_init(r[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": _dense_init(r[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p: Params, x: jax.Array, positions: jax.Array):
+    B, T, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset: int | jax.Array = 0,
+          kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference scaled-dot-product attention with GQA.
+
+    q: (B, Tq, Hq, Dh); k, v: (B, Tk, Hkv, Dh). fp32 softmax.
+    kv_len: optional (B,) valid-length mask for cached decode.
+    """
+    B, Tq, Hq, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) / math.sqrt(Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, Tq, Hkv, group, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    neg = jnp.asarray(-1e30, jnp.float32)
+    if causal:
+        off = jnp.asarray(q_offset)
+        off = jnp.broadcast_to(off.reshape(-1), (B,))  # per-batch offset
+        qpos = jnp.arange(Tq)[None, :] + off[:, None]  # (B, Tq)
+        kpos = jnp.arange(Tk)
+        mask = qpos[:, :, None] >= kpos[None, None, :]  # (B, Tq, Tk)
+        scores = jnp.where(mask[:, None, None], scores, neg)
+    if kv_len is not None:
+        valid = jnp.arange(Tk)[None, :] < kv_len[:, None]  # (B, Tk)
+        scores = jnp.where(valid[:, None, None, None], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(B, Tq, Hq, Dh).astype(q.dtype)
+
+
+def _chunked_attention(
+    q, k, v, *, causal: bool, q_offset=None, kv_len=None,
+    blk_q: int = 512, blk_k: int = 1024,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: double lax.scan with online
+    softmax, fp32 accumulators, O(blk_q * blk_k) live scores. This is the
+    memory- and FLOP-shape the Pallas kernel has on TPU, expressed portably —
+    the dry-run lowers this, so compile-time memory analysis reflects the
+    production tiling. Wrapped in remat(nothing_saveable): the backward
+    recomputes tiles exactly like the flash backward kernel."""
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(blk_q, Tq)
+    bk = min(blk_k, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0
+    nq, nk = Tq // bq, Tk // bk
+    scale = 1.0 / math.sqrt(D)
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32)
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,))
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nq, bq, Hkv, G, D)
+    kf = k.astype(jnp.float32).reshape(B, nk, bk, Hkv, D)
+    vf = v.astype(jnp.float32).reshape(B, nk, bk, Hkv, D)
+
+    def q_chunk(qi, q_blk):
+        # q_blk: (B, bq, Hkv, G, D)
+        qpos = q_offset[:, None] + qi * bq + jnp.arange(bq)[None, :]  # (B,bq)
+
+        def k_chunk(carry, args):
+            ki, k_blk, v_blk = args
+            m, l, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk)
+            kpos = ki * bk + jnp.arange(bk)  # (bk,)
+            neg = jnp.asarray(-1e30, jnp.float32)
+            if causal:
+                msk = qpos[:, :, None] >= kpos[None, None, :]  # (B,bq,bk)
+                s = jnp.where(msk[:, None, None], s, neg)      # (B,1,1,bq,bk)
+            if kv_len is not None:
+                valid = kpos[None, :] < kv_len[:, None]  # (B,bk)
+                s = jnp.where(valid[:, None, None, None, :], s, neg)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        ks = (jnp.arange(nk), kf.swapaxes(0, 1), vf.swapaxes(0, 1))
+        (m, l, acc), _ = jax.lax.scan(k_chunk, (m0, l0, a0), ks)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,Hkv,G,bq,D)
+        return out.transpose(0, 3, 1, 2, 4)                   # (B,bq,Hkv,G,D)
+
+    outs = jax.lax.map(lambda args: q_chunk(*args),
+                       (jnp.arange(nq), qf.swapaxes(0, 1)))   # (nq,B,bq,Hkv,G,D)
+    out = outs.swapaxes(0, 1).reshape(B, Tq, Hq, D)
+    return out.astype(q.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _chunked_remat(causal: bool, has_kvlen: bool, blk_q: int, blk_k: int):
+    """Static-config wrapper (jax.checkpoint traces kwargs, so bools must be
+    closed over, not passed)."""
+
+    def f(q, k, v, q_offset, kv_len):
+        return _chunked_attention(
+            q, k, v, causal=causal, q_offset=q_offset,
+            kv_len=kv_len if has_kvlen else None, blk_q=blk_q, blk_k=blk_k,
+        )
+
+    return jax.checkpoint(
+        f, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+    )
+
+
+def chunked_attention(q, k, v, *, causal, q_offset=None, kv_len=None,
+                      blk_q=512, blk_k=1024):
+    B = q.shape[0]
+    qo = (jnp.zeros((B,), jnp.int32) if q_offset is None
+          else jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,)))
+    kl = (jnp.zeros((B,), jnp.int32) if kv_len is None
+          else jnp.asarray(kv_len, jnp.int32))
+    f = _chunked_remat(bool(causal), kv_len is not None, blk_q, blk_k)
+    return f(q, k, v, qo, kl)
+
+
+CHUNKED_ATTN_THRESHOLD = 1024  # use tiled path at/above this many kv tokens
+
+
+def attention(
+    cfg: ArchConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,
+    learned_pos_table: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Full attention: training/prefill when cache is None, one-step decode
+    when cache is given (x has T=1; cache_pos is the write index (B,) or
+    scalar)."""
+    B, T, _ = x.shape
+    if positions is None:
+        if cache is None:
+            positions = jnp.arange(T)[None, :].repeat(B, 0)
+        else:
+            cp = jnp.broadcast_to(
+                jnp.asarray(cache_pos, jnp.int32).reshape(-1), (B,)
+            )
+            positions = cp[:, None] + jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+
+    if cache is None:
+        if cfg.use_flash:
+            from repro.kernels import ops as kops
+
+            out = kops.flash_attention(q, k, v, causal=True)
+        elif T >= CHUNKED_ATTN_THRESHOLD:
+            out = chunked_attention(q, k, v, causal=True)
+        else:
+            out = _sdpa(q, k, v, causal=True)
+        new_cache = None
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32).reshape(-1), (B,))
+        k_cache = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice(c, kn, (i, 0, 0)))(
+            cache["k"], k, idx
+        )
+        v_cache = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice(c, vn, (i, 0, 0)))(
+            cache["v"], v, idx
+        )
+        # Causal over the cache: query t (global position idx+t) sees keys
+        # [0, idx+t]; kv_len hides never-written slots.
+        if k_cache.shape[1] >= CHUNKED_ATTN_THRESHOLD:
+            out = chunked_attention(
+                q, k_cache, v_cache, causal=True, q_offset=idx, kv_len=idx + T,
+                blk_q=min(512, T), blk_k=1024,
+            )
+        else:
+            out = _sdpa(q, k_cache, v_cache, causal=True, q_offset=idx, kv_len=idx + T)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    y = out.reshape(B, T, cfg.q_dim) @ p["wo"]
+    return y, new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ----------------------------------------------------------------------- FFN
+
+
+def init_ffn(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    r = jax.random.split(rng, 3)
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": _dense_init(r[0], cfg.d_model, cfg.d_ff, dtype),
+            "w_up": _dense_init(r[1], cfg.d_model, cfg.d_ff, dtype),
+            "w_down": _dense_init(r[2], cfg.d_ff, cfg.d_model, dtype),
+        }
+    return {
+        "w_up": _dense_init(r[0], cfg.d_model, cfg.d_ff, dtype),
+        "b_up": jnp.zeros((cfg.d_ff,), dtype),
+        "w_down": _dense_init(r[1], cfg.d_ff, cfg.d_model, dtype),
+        "b_down": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def apply_ffn(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ----------------------------------------------------------------- embedding
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """table[tokens] with an explicit f32 scatter-add backward.
+
+    Two reasons this is not a plain gather: (1) fp32 gradient accumulation
+    into the (large, shared) embedding table regardless of compute dtype;
+    (2) the autodiff transpose-of-gather emits a copy-rooted scatter
+    reduction whose bf16 all-reduce XLA:CPU's AllReducePromotion pass cannot
+    clone (hard CHECK crash) — the explicit formulation lowers cleanly on
+    every backend and shards identically (vocab-parallel)."""
+    return _embed_lookup(tuple(table.shape), jnp.dtype(table.dtype).name,
+                         table, tokens)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _embed_lookup(shape, dtype_name, table, tokens):
+    return table[tokens]
+
+
+def _embed_lookup_fwd(shape, dtype_name, table, tokens):
+    return table[tokens], tokens
+
+
+def _embed_lookup_bwd(shape, dtype_name, tokens, dout):
+    flat_tok = tokens.reshape(-1)
+    flat_dout = dout.reshape(-1, shape[-1]).astype(jnp.float32)
+    dtable = jnp.zeros(shape, jnp.float32).at[flat_tok].add(flat_dout)
+    return dtable.astype(dtype_name), None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def init_embedding(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    r = jax.random.split(rng, 3)
+    p: Params = {"tok": _embed_init(r[0], cfg.vocab_size, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(r[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.pos == "learned":
+        p["pos"] = _embed_init(r[2], cfg.max_seq_len, cfg.d_model, dtype)
+    return p

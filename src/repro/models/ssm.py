@@ -1,0 +1,396 @@
+"""State-space / recurrent mixers: Mamba (selective SSM), mLSTM and sLSTM
+(xLSTM). Each mixer exposes three entry points used by the stack:
+
+  init_*(cfg, rng)                  -> params
+  apply_*(cfg, p, x)                -> y                    (train / prefill)
+  step_*(cfg, p, x_t, state)        -> (y_t, state)         (decode)
+  init_*_state(cfg, batch)          -> state
+
+All are TPU-shaped: the sequential dimension is processed in CHUNKS with a
+recurrent carry between chunks (lax.scan) and parallel math inside a chunk
+(associative_scan / batched matmuls), which bounds peak activation memory by
+the chunk size instead of the sequence length and keeps decode O(1) per
+token — this is what qualifies xLSTM/Jamba for the 500k-token shape.
+Stabilized exponential gating follows the xLSTM paper (appendix A):
+everything passes through fp32 log-space with a running max stabilizer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import _dense_init
+
+Params = Dict[str, Any]
+
+
+def _ssm(cfg: ArchConfig) -> SSMConfig:
+    return cfg.ssm or SSMConfig()
+
+
+# =============================================================== Mamba (S6)
+
+
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    s = _ssm(cfg)
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state
+
+
+def init_mamba(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    s = _ssm(cfg)
+    d_in, dt_rank, N = mamba_dims(cfg)
+    r = jax.random.split(rng, 6)
+    # S4D-real initialization for A.
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    dt = jnp.exp(
+        jax.random.uniform(r[4], (d_in,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    inv_softplus_dt = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": _dense_init(r[0], cfg.d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(r[1], (s.d_conv, d_in), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": _dense_init(r[2], d_in, dt_rank + 2 * N, dtype),
+        "dt_proj": _dense_init(r[3], dt_rank, d_in, dtype),
+        "dt_bias": inv_softplus_dt,          # fp32
+        "A_log": jnp.log(A),                 # fp32
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _dense_init(r[5], d_in, cfg.d_model, dtype),
+    }
+
+
+def _mamba_conv(p: Params, x: jax.Array, state: jax.Array | None):
+    """Causal depthwise conv along T. x: (B, T, d_in). state: (B, K-1, d_in)."""
+    K = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+K-1, d)
+    out = sum(
+        xp[:, k : k + x.shape[1], :] * p["conv_w"][k][None, None, :] for k in range(K)
+    )
+    new_state = xp[:, -(K - 1) :, :]
+    return out + p["conv_b"][None, None, :], new_state
+
+
+def _selective_scan_chunk(a: jax.Array, bx: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + bx_t within one chunk via associative scan.
+
+    a, bx: (B, c, d_in, N) fp32; h0: (B, d_in, N). Returns (h_all, h_last).
+    """
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a0 = jnp.concatenate([jnp.ones_like(h0)[:, None], a], axis=1)
+    b0 = jnp.concatenate([h0[:, None], bx], axis=1)
+    _, h = jax.lax.associative_scan(combine, (a0, b0), axis=1)
+    return h[:, 1:], h[:, -1]
+
+
+def apply_mamba(
+    cfg: ArchConfig,
+    p: Params,
+    x: jax.Array,
+    state: Params | None = None,
+    chunk: int | None = None,
+):
+    """Training / prefill / multi-token cached step. x: (B, T, d_model).
+    Returns (y, new_state); new_state is None when state is None (training)."""
+    s = _ssm(cfg)
+    d_in, dt_rank, N = mamba_dims(cfg)
+    B, T, _ = x.shape
+    chunk = chunk or min(T, s.chunk_size)
+    assert T % chunk == 0, (T, chunk)
+
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)
+    xb, conv_state = _mamba_conv(p, xb, None if state is None else state["conv"])
+    xb = jax.nn.silu(xb)
+
+    dtbc = xb @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(dtbc, [dt_rank, dt_rank + N], axis=-1)
+    delta = jax.nn.softplus(
+        (dt @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )  # (B, T, d_in) fp32
+    A = -jnp.exp(p["A_log"])  # (d_in, N)
+
+    xb32 = xb.astype(jnp.float32)
+    Bm32 = Bm.astype(jnp.float32)
+    Cm32 = Cm.astype(jnp.float32)
+
+    n_chunks = T // chunk
+
+    def chunk_body(h, args):
+        d_c, x_c, B_c, C_c = args  # (B, c, ...) fp32
+        a = jnp.exp(d_c[..., None] * A[None, None])             # (B,c,d_in,N)
+        bx = (d_c * x_c)[..., None] * B_c[:, :, None, :]        # (B,c,d_in,N)
+        h_all, h_last = _selective_scan_chunk(a, bx, h)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, C_c)
+        return h_last, y
+
+    args = tuple(
+        t.reshape(B, n_chunks, chunk, -1).swapaxes(0, 1)
+        for t in (delta, xb32, Bm32, Cm32)
+    )
+    h0 = jnp.zeros((B, d_in, N), jnp.float32) if state is None else state["h"]
+    h_last, ys = jax.lax.scan(chunk_body, h0, args)
+    y = ys.swapaxes(0, 1).reshape(B, T, d_in)
+    y = y + xb32 * p["D"][None, None, :]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = None if state is None else {"conv": conv_state, "h": h_last}
+    return y, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    s = _ssm(cfg)
+    d_in, _, N = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((batch, d_in, N), jnp.float32),
+    }
+
+
+def step_mamba(cfg: ArchConfig, p: Params, x: jax.Array, state: Params):
+    """Cached step (T >= 1): delegates to the chunked path with the carried
+    state, which the parity tests pin against the pure recurrence."""
+    return apply_mamba(cfg, p, x, state=state, chunk=x.shape[1])
+
+
+# ================================================================== mLSTM
+
+
+def mlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    s = _ssm(cfg)
+    d_in = int(s.proj_factor_mlstm * cfg.d_model)
+    return d_in, d_in // cfg.n_heads
+
+
+def init_mlstm(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    d_in, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    r = jax.random.split(rng, 7)
+
+    def block_diag(key):  # per-head BlockLinear, as in the xLSTM release
+        ks = jax.random.split(key, H)
+        return jnp.stack([
+            (jax.random.normal(k2, (dh, dh), jnp.float32) / math.sqrt(dh)).astype(dtype)
+            for k2 in ks
+        ])
+
+    return {
+        "up": _dense_init(r[0], cfg.d_model, 2 * d_in, dtype),
+        "wq_blk": block_diag(r[1]),
+        "wk_blk": block_diag(r[2]),
+        "wv_blk": block_diag(r[3]),
+        "w_gates": _dense_init(r[4], cfg.d_model, 2 * H, jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "gn_scale": jnp.ones((d_in,), jnp.float32),
+        "down": _dense_init(r[5], d_in, cfg.d_model, dtype),
+    }
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> Params:
+    d_in, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """Stabilized chunk-parallel mLSTM.
+
+    q,k,v: (B,H,c,dh) fp32; li,lf: (B,H,c) fp32 log gates;
+    state: dict(C,n,m). Returns (h (B,H,c,dh), new_state).
+    """
+    B, H, c, dh = q.shape
+    F = jnp.cumsum(lf, axis=-1)                       # inclusive: sum_{r<=t} lf_r
+    g = li - F                                        # g_s = li_s - F_s
+    m_intra = jax.lax.cummax(g, axis=g.ndim - 1)      # max_{s<=t} g_s
+    m_state = state["m"]                              # reference stabilizer
+    m_t = F + jnp.maximum(m_state[..., None], m_intra)  # (B,H,c)
+
+    # Intra-chunk decay weights: D_{ts} = exp(F_t + g_s - m_t) for s <= t.
+    logD = F[..., :, None] + g[..., None, :] - m_t[..., :, None]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(mask[None, None], jnp.exp(logD), 0.0)
+    kq = (q @ k.swapaxes(-1, -2)) / math.sqrt(dh)     # (B,H,t,s)
+    scores = kq * D
+    # Inter-chunk contribution of the carried state, same stabilization.
+    w_in = jnp.exp(F + m_state[..., None] - m_t)      # (B,H,c)
+    h_num = scores @ v + w_in[..., None] * jnp.einsum(
+        "bhtd,bhde->bhte", q / math.sqrt(dh), state["C"]
+    )
+    # Normalizer n_t · q_t (k·q weighted by the same decays).
+    nq_total = jnp.sum(scores, axis=-1) + w_in * jnp.einsum(
+        "bhd,bhtd->bht", state["n"], q
+    ) / math.sqrt(dh)
+    denom = jnp.maximum(jnp.abs(nq_total), jnp.exp(-m_t))
+    h = h_num / denom[..., None]
+
+    # State update to end of chunk (t = c).
+    F_c = F[..., -1:]                                 # (B,H,1)
+    m_out = F_c[..., 0] + jnp.maximum(m_state, jnp.max(g, axis=-1))
+    w_state = jnp.exp(F_c[..., 0] + m_state - m_out)  # (B,H)
+    w_tok = jnp.exp(F_c + g - m_out[..., None])       # (B,H,c)
+    C_out = w_state[..., None, None] * state["C"] + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", w_tok, k, v
+    )
+    n_out = w_state[..., None] * state["n"] + jnp.einsum("bhs,bhsd->bhd", w_tok, k)
+    return h, {"C": C_out, "n": n_out, "m": m_out}
+
+
+def apply_mlstm(cfg: ArchConfig, p: Params, x: jax.Array, state: Params | None = None):
+    """Returns (y, new_state); new_state is None when state is None."""
+    s = _ssm(cfg)
+    d_in, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    B, T, _ = x.shape
+    c = min(T, s.chunk_size)
+    assert T % c == 0
+
+    up = x @ p["up"]
+    xb, z = jnp.split(up, 2, axis=-1)
+    xh = xb.reshape(B, T, H, dh)
+    q = jnp.einsum("bthd,hde->bhte", xh, p["wq_blk"]).astype(jnp.float32)
+    k = jnp.einsum("bthd,hde->bhte", xh, p["wk_blk"]).astype(jnp.float32)
+    v = jnp.einsum("bthd,hde->bhte", xh, p["wv_blk"]).astype(jnp.float32)
+    gates = x.astype(jnp.float32) @ p["w_gates"] + p["b_gates"][None, None]
+    li, lf = jnp.split(gates, 2, axis=-1)             # (B,T,H)
+    li = li.transpose(0, 2, 1)
+    lf = jax.nn.log_sigmoid(lf.transpose(0, 2, 1))
+
+    n_chunks = T // c
+
+    def body(state, args):
+        qc, kc, vc, lic, lfc = args
+        h, new_state = _mlstm_chunk(qc, kc, vc, lic, lfc, state)
+        return new_state, h
+
+    def split(t):  # (B,H,T,...) -> (n_chunks,B,H,c,...)
+        t = t.reshape(B, H, n_chunks, c, *t.shape[3:])
+        return jnp.moveaxis(t, 2, 0)
+
+    args = tuple(split(t) for t in (q, k, v, li, lf))
+    state0 = init_mlstm_state(cfg, B) if state is None else state
+    state_out, hs = jax.lax.scan(body, state0, args)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, T, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(B, T, d_in)
+
+    # Headwise group norm, output gate, down projection.
+    h = _groupnorm(h, H, p["gn_scale"]).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["down"]
+    return y, (None if state is None else state_out)
+
+
+def _groupnorm(h: jax.Array, n_groups: int, scale: jax.Array, eps=1e-6) -> jax.Array:
+    B, T, d = h.shape
+    hg = h.reshape(B, T, n_groups, d // n_groups).astype(jnp.float32)
+    mu = jnp.mean(hg, axis=-1, keepdims=True)
+    var = jnp.var(hg, axis=-1, keepdims=True)
+    hn = (hg - mu) * jax.lax.rsqrt(var + eps)
+    return hn.reshape(B, T, d) * scale[None, None].astype(jnp.float32)
+
+
+def step_mlstm(cfg: ArchConfig, p: Params, x: jax.Array, state: Params):
+    """Cached step (T >= 1) via the chunked path."""
+    return apply_mlstm(cfg, p, x, state=state)
+
+
+# ================================================================== sLSTM
+
+
+def init_slstm(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    s = _ssm(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    d_ff = int(s.proj_factor_slstm * d)
+    r = jax.random.split(rng, 12)
+    p: Params = {"gn_scale": jnp.ones((d,), jnp.float32)}
+    for i, name in enumerate(("i", "f", "z", "o")):
+        p[f"w_{name}"] = _dense_init(r[i], d, d, dtype)
+        # Block-diagonal (per-head) recurrent matrices, as in the paper.
+        p[f"r_{name}"] = (
+            jax.random.normal(r[4 + i], (H, dh, dh), jnp.float32) / math.sqrt(dh)
+        ).astype(jnp.float32)
+        p[f"b_{name}"] = jnp.zeros((d,), jnp.float32)
+    p["b_f"] = p["b_f"] + 3.0  # forget-gate bias init
+    # Post-block gated FFN (proj factor 4/3), part of the sLSTM block.
+    p["ff_up"] = _dense_init(r[8], d, 2 * d_ff, dtype)
+    p["ff_down"] = _dense_init(r[9], d_ff, d, dtype)
+    return p
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> Params:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(cfg: ArchConfig, p: Params, xw: Params, state: Params):
+    """One timestep. xw: precomputed input projections {i,f,z,o}: (B, d)."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    B = state["h"].shape[0]
+
+    def rec(name):
+        hh = state["h"].reshape(B, H, dh)
+        return jnp.einsum("bhd,hde->bhe", hh, p[f"r_{name}"]).reshape(B, d)
+
+    it = xw["i"] + rec("i") + p["b_i"]
+    ft = xw["f"] + rec("f") + p["b_f"]
+    zt = jnp.tanh(xw["z"] + rec("z") + p["b_z"])
+    ot = jax.nn.sigmoid(xw["o"] + rec("o") + p["b_o"])
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + state["m"], it)
+    i_bar = jnp.exp(it - m_new)
+    f_bar = jnp.exp(lf + state["m"] - m_new)
+    c_new = f_bar * state["c"] + i_bar * zt
+    n_new = f_bar * state["n"] + i_bar
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def apply_slstm(cfg: ArchConfig, p: Params, x: jax.Array, state: Params | None = None):
+    """Returns (y, new_state); new_state is None when state is None."""
+    B, T, d = x.shape
+    xf = x.astype(jnp.float32)
+    xw = {k: (xf @ p[f"w_{k}"].astype(jnp.float32)) for k in ("i", "f", "z", "o")}
+
+    def body(st, t_slices):
+        h, new_st = _slstm_cell(cfg, p, t_slices, st)
+        return new_st, h
+
+    seq = {k: v.swapaxes(0, 1) for k, v in xw.items()}  # (T, B, d)
+    state0 = init_slstm_state(cfg, B) if state is None else state
+    state_out, hs = jax.lax.scan(body, state0, seq)
+    h = hs.swapaxes(0, 1)  # (B, T, d)
+    h = _groupnorm(h, cfg.n_heads, p["gn_scale"]).astype(x.dtype)
+    up, gate = jnp.split(h @ p["ff_up"], 2, axis=-1)
+    y = (jax.nn.gelu(up) * gate) @ p["ff_down"]
+    return y, (None if state is None else state_out)
+
+
+def step_slstm(cfg: ArchConfig, p: Params, x: jax.Array, state: Params):
+    """Cached step (T >= 1) via the scan path."""
+    return apply_slstm(cfg, p, x, state=state)

@@ -1,0 +1,105 @@
+"""AdamW with fp32 state + optional fp32 master weights over bf16 params,
+global-norm clipping, and warmup-cosine schedule. Elementwise throughout, so
+optimizer state shards exactly like its parameter (FSDP x TP) and the update
+runs on local shards with no extra communication (the clip norm is computed
+upstream and passed in — the Trainer folds it into the gradient-sync psum)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    master_weights: bool = True
+
+
+class OptState(NamedTuple):
+    m: Params
+    v: Params
+    master: Optional[Params]
+    step: jax.Array
+
+
+def init(cfg: AdamWConfig, params: Params) -> OptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (
+        jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+        if cfg.master_weights
+        else None
+    )
+    return OptState(m=zeros, v=jax.tree_util.tree_map(jnp.copy, zeros),
+                    master=master, step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def update(
+    cfg: AdamWConfig,
+    grads: Params,
+    state: OptState,
+    params: Params,
+    grad_norm: Optional[jax.Array] = None,
+) -> Tuple[Params, OptState]:
+    """One AdamW step. grads are the (already averaged) fp32-castable grads;
+    grad_norm, when given, is the GLOBAL gradient norm for clipping."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    if grad_norm is None:
+        grad_norm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(grad_norm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    ref = state.master if state.master is not None else params
+
+    def one(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        upd = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (upd + cfg.weight_decay * p32)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    flat_p = jax.tree_util.tree_leaves(ref)
+    outs = [one(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    m_new = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    v_new = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    p32_new = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+
+    orig_dtypes = jax.tree_util.tree_map(lambda p: p.dtype, params)
+    params_new = jax.tree_util.tree_map(
+        lambda p32, dt: p32.astype(dt), p32_new, orig_dtypes
+    )
+    master_new = p32_new if state.master is not None else None
+    return params_new, OptState(m=m_new, v=v_new, master=master_new, step=step)

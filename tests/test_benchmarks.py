@@ -1,0 +1,66 @@
+"""Validates the paper's experimental claims against our benchmarks:
+
+1. Figure 1 trend: Fast Raft commits faster than Raft at low (<2%) packet
+   loss — the regime the paper calls out as the real-world win — and the
+   fast-track fallback fraction grows with loss (the mechanism behind the
+   paper's >4% crossover).
+2. Message rounds (original paper's core claim): non-leader proposals
+   commit in 2 rounds on the fast track vs 3 on classic Raft; leader
+   proposals are 2 rounds in both.
+"""
+import pytest
+
+from benchmarks import latency_vs_loss, rounds_to_commit, throughput
+
+
+def test_fig1_fastraft_wins_at_low_loss():
+    """Loss-free: the fast track strictly wins (2 vs 3 hops). At 1% loss the
+    paper's claim is a modest advantage that erodes toward the crossover —
+    with a finite sample we assert fastraft stays within 10% of raft (it is
+    usually below; a single unlucky fallback in a small sample can tip it)."""
+    rows = {}
+    for proto in ("raft", "fastraft"):
+        for loss in (0.0, 0.01):
+            cells = [latency_vs_loss.run_cell(proto, loss, seed=200 + s, n_ops=30)
+                     for s in range(4)]
+            rows[(proto, loss)] = sum(c["mean_latency"] for c in cells) / len(cells)
+    assert rows[("fastraft", 0.0)] < rows[("raft", 0.0)]
+    assert rows[("fastraft", 0.01)] < rows[("raft", 0.01)] * 1.10
+
+
+def test_fig1_fallbacks_grow_with_loss():
+    low = latency_vs_loss.run_cell("fastraft", 0.0, seed=300, n_ops=20)
+    high = latency_vs_loss.run_cell("fastraft", 0.08, seed=300, n_ops=20)
+    assert high["fallback_fraction"] >= low["fallback_fraction"]
+    assert low["fallback_fraction"] == 0.0
+
+
+def test_rounds_to_commit_exact():
+    assert rounds_to_commit.measure("raft", via_leader=True) == pytest.approx(2.0)
+    assert rounds_to_commit.measure("raft", via_leader=False) == pytest.approx(3.0)
+    assert rounds_to_commit.measure("fastraft", via_leader=False) == pytest.approx(2.0)
+    assert rounds_to_commit.measure("fastraft", via_leader=True) == pytest.approx(2.0)
+
+
+def test_throughput_single_proposer_fast_share_high():
+    """Largely non-conflicting proposals (the paper's fast-track regime)."""
+    r = throughput.run("fastraft", burst=16, n_bursts=3, loss=0.0,
+                       proposers="single")
+    assert r["fast_share"] > 0.9
+    r2 = throughput.run("raft", burst=16, n_bursts=3, loss=0.0,
+                        proposers="single")
+    assert r2["fast_share"] == 0.0
+    assert r["mean_latency"] <= r2["mean_latency"]
+
+
+def test_throughput_conflict_regime_falls_back_but_commits():
+    """Simultaneous proposals from every non-leader deliberately collide on
+    slots — the paper's conflict case: the fast track degrades to classic,
+    but every op still commits exactly once."""
+    r = throughput.run("fastraft", burst=16, n_bursts=3, loss=0.0,
+                       proposers="all")
+    assert r["committed"] == 48
+    assert r["fast_share"] < 0.9  # collisions force fallbacks
+    single = throughput.run("fastraft", burst=16, n_bursts=3, loss=0.0,
+                            proposers="single")
+    assert single["mean_latency"] <= r["mean_latency"]

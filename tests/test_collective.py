@@ -1,0 +1,22 @@
+"""In-graph consensus collectives need >1 device; run the checks in a
+subprocess with a forced 8-device host platform so the main test process
+keeps its single-device view (required by the smoke tests)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+def test_collective_consensus_multidevice():
+    child = pathlib.Path(__file__).parent / "collective_child.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, str(child)], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "COLLECTIVE-OK" in res.stdout

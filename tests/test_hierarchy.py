@@ -1,0 +1,85 @@
+"""Hierarchical consensus: per-pod groups + global tier of pod leaders."""
+import pytest
+
+from repro.core.hierarchy import HierarchicalCluster
+
+
+def test_bootstrap_two_pods():
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=31)
+    h.bootstrap()
+    assert h.global_leader() is not None
+    for pod in h.pod_ids:
+        assert h.pods[pod].leader() is not None
+
+
+def test_global_commit_and_dissemination():
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=32)
+    h.bootstrap()
+    eids = [h.propose_global(f"ckpt-{i}") for i in range(4)]
+    assert h.run_until_globally_committed(eids)
+    assert h.run_until_delivered(4)
+    h.check_consistency()
+    # Every pod saw the same global sequence.
+    assert h.delivered["pod0"] == h.delivered["pod1"]
+
+
+def test_three_pod_tier_survives_one_pod_dark():
+    h = HierarchicalCluster(n_pods=3, hosts_per_pod=3, seed=33)
+    h.bootstrap()
+    dark = [p for p in h.pod_ids if p != h.global_leader()][0]
+    h.partition_pod(dark)
+    e = h.propose_global("while-dark", via_pod=h.global_leader())
+    assert h.run_until_globally_committed([e])
+    h.heal_pod(dark)
+    h.run(20_000)
+    h.check_consistency()
+
+
+def test_pod_leader_crash_global_member_migrates():
+    """Pod-leader churn must be invisible to global membership: the member
+    (pod identity) stays; only its physical host changes."""
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=34)
+    h.bootstrap()
+    e1 = h.propose_global("before")
+    assert h.run_until_globally_committed([e1])
+    victim_pod = h.pod_ids[0]
+    h.crash_pod_leader(victim_pod)
+    h.run(5000)  # local re-election
+    assert h.pods[victim_pod].leader() is not None
+    e2 = h.propose_global("after", via_pod=h.pod_ids[1])
+    assert h.run_until_globally_committed([e2], 60_000)
+    h.check_consistency()
+    # Global membership never changed.
+    for n in h.global_nodes.values():
+        assert sorted(n.members) == sorted(h.pod_ids)
+
+
+def test_global_tier_lossy_links():
+    h = HierarchicalCluster(n_pods=3, hosts_per_pod=3, seed=35, global_loss=0.05)
+    h.bootstrap()
+    eids = [h.propose_global(f"g{i}") for i in range(5)]
+    assert h.run_until_globally_committed(eids, 120_000)
+    h.check_consistency()
+
+
+def test_local_fast_global_hierarchy_latency_split():
+    """Local commits ride cheap links; only global agreement pays the
+    inter-pod latency — the core scaling argument of the hierarchy paper."""
+    h = HierarchicalCluster(
+        n_pods=2, hosts_per_pod=3, seed=36, local_latency=0.5, global_latency=10.0
+    )
+    h.bootstrap()
+    h.run(2000)
+    # Local commit inside a pod:
+    pod = h.pods["pod0"]
+    lead = pod.leader()
+    e_local = pod.submit("local-op", via=lead)
+    assert pod.run_until_committed([e_local])
+    local_lat = pod.metrics.traces[e_local].latency
+    # Global commit:
+    e_glob = h.propose_global("global-op", via_pod=h.global_leader())
+    assert h.run_until_globally_committed([e_glob])
+    global_lat = h.global_metrics.traces[e_glob].latency
+    assert local_lat < global_lat, (local_lat, global_lat)
+    assert local_lat <= 2.0  # couple of 0.5ms hops
+    assert global_lat >= 10.0  # at least one inter-pod round-trip leg

@@ -1,0 +1,155 @@
+"""Property-based safety tests: hypothesis drives random chaos schedules
+(submissions from random nodes, crashes, restarts, partitions, lossy links)
+and the Recorder enforces the two core safety invariants ONLINE:
+
+  * Election Safety  — at most one leader per term,
+  * State Machine Safety — no two nodes ever apply different entries at the
+    same index.
+
+plus end-of-run checks: committed-log prefix consistency and exactly-once
+commitment per submitted command.
+"""
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.sim import Cluster
+from repro.core.types import fast_quorum, majority, recovery_threshold
+
+
+# ---------------------------------------------------------------------------
+# Quorum arithmetic properties (the algebra behind fast-track safety).
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=2, max_value=4096))
+def test_fast_quorum_intersection_contains_majority(m):
+    """Any two fast quorums overlap in >= majority-1 nodes, so a conflicting
+    pair of fast commits is impossible."""
+    assert 2 * fast_quorum(m) - m >= majority(m) - 1
+
+
+@given(st.integers(min_value=3, max_value=4096))
+def test_recovery_threshold_sound_and_unambiguous(m):
+    fq, mj, t = fast_quorum(m), majority(m), recovery_threshold(m)
+    # Sound: a fast-committed entry appears >= t times in any majority.
+    assert fq + mj - m >= t >= 1
+    # Unambiguous: two entries cannot both reach t within one majority.
+    assert 2 * t > mj
+
+
+@given(
+    st.integers(min_value=3, max_value=512),
+    st.integers(min_value=1, max_value=511),
+)
+def test_classic_and_fast_commit_mutually_exclusive(m, k):
+    """A classic quorum for entry X and a fast quorum for entry Y at the same
+    slot would need majority(m) + fast_quorum(m) <= m distinct nodes —
+    impossible, since per-slot votes are first-come-first-served."""
+    assert majority(m) + fast_quorum(m) > m
+
+
+# ---------------------------------------------------------------------------
+# Randomized schedule exploration.
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 4)),
+        st.tuples(st.just("crash"), st.integers(0, 4)),
+        st.tuples(st.just("restart"), st.integers(0, 4)),
+        st.tuples(st.just("run"), st.integers(50, 800)),
+        st.tuples(st.just("partition"), st.integers(1, 4)),
+        st.tuples(st.just("heal"), st.integers(0, 0)),
+    ),
+    min_size=4,
+    max_size=25,
+)
+
+
+def _run_chaos(protocol: str, n: int, seed: int, loss: float, ops) -> None:
+    c = Cluster(n=n, protocol=protocol, seed=seed, loss=loss, jitter=2.0)
+    c.run_until_leader(30_000)
+    ids = list(c.nodes)
+    submitted = []
+    crashed = set()
+    for op, arg in ops:
+        if op == "submit":
+            via = ids[arg % n]
+            if c.nodes[via].alive:
+                submitted.append(c.submit(f"cmd-{len(submitted)}", via=via))
+        elif op == "crash":
+            nid = ids[arg % n]
+            # Keep a majority alive so liveness checks stay meaningful.
+            if len(crashed) + 1 < n - n // 2 and c.nodes[nid].alive:
+                c.crash(nid)
+                crashed.add(nid)
+        elif op == "restart":
+            nid = ids[arg % n]
+            if nid in crashed:
+                c.restart(nid)
+                crashed.discard(nid)
+        elif op == "run":
+            c.run(float(arg))
+        elif op == "partition":
+            k = max(1, arg % n)
+            c.partition(ids[:k], ids[k:])
+        elif op == "heal":
+            c.heal()
+    # Heal everything and let the cluster converge.
+    c.heal()
+    for nid in list(crashed):
+        c.restart(nid)
+    c.run(30_000)
+
+    # SAFETY: prefix-consistent committed logs (online invariants already
+    # checked every apply by the Recorder).
+    c.check_log_consistency()
+    # Exactly-once: no command appears twice in any committed log.
+    for nid, node in c.nodes.items():
+        log = node.committed_commands()
+        assert len(log) == len(set(log)), f"{nid} double-committed: {log}"
+
+
+@settings(max_examples=25, deadline=None, suppress_health_check=list(HealthCheck))
+@given(
+    ops=ops_strategy,
+    seed=st.integers(0, 2**16),
+    n=st.sampled_from([3, 4, 5]),
+    loss=st.sampled_from([0.0, 0.02, 0.10]),
+)
+def test_fastraft_chaos_safety(ops, seed, n, loss):
+    _run_chaos("fastraft", n, seed, loss, ops)
+
+
+@settings(max_examples=15, deadline=None, suppress_health_check=list(HealthCheck))
+@given(
+    ops=ops_strategy,
+    seed=st.integers(0, 2**16),
+    n=st.sampled_from([3, 5]),
+    loss=st.sampled_from([0.0, 0.05]),
+)
+def test_raft_chaos_safety(ops, seed, n, loss):
+    _run_chaos("raft", n, seed, loss, ops)
+
+
+@settings(max_examples=10, deadline=None, suppress_health_check=list(HealthCheck))
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.sampled_from([4, 5, 7]),
+    burst=st.integers(2, 10),
+)
+def test_fastraft_concurrent_proposers_liveness(seed, n, burst):
+    """All concurrent (conflicting) proposals eventually commit exactly once
+    on a healthy network."""
+    c = Cluster(n=n, protocol="fastraft", seed=seed)
+    lead = c.run_until_leader(30_000)
+    assert lead is not None
+    c.run(500)
+    others = [x for x in c.nodes if x != lead]
+    eids = [c.submit(f"b{i}", via=others[i % len(others)]) for i in range(burst)]
+    assert c.run_until_committed(eids, 120_000)
+    c.run(2000)
+    c.check_log_consistency()
+    log = c.nodes[lead].committed_commands()
+    for i in range(burst):
+        assert log.count(f"b{i}") == 1

@@ -1,0 +1,112 @@
+"""Classic Raft unit tests: mirrors the lab-3 style correctness checks the
+paper used (election, replication, failover, persistence, membership)."""
+import pytest
+
+from repro.core.sim import Cluster
+from repro.core.types import Role
+
+
+def test_single_leader_elected():
+    c = Cluster(n=3, protocol="raft", seed=11)
+    lead = c.run_until_leader()
+    assert lead is not None
+    leaders = [n for n in c.nodes.values() if n.role is Role.LEADER]
+    assert len(leaders) == 1
+
+
+def test_commit_simple():
+    c = Cluster(n=3, protocol="raft", seed=12)
+    lead = c.run_until_leader()
+    eids = [c.submit(f"cmd{i}", via=lead) for i in range(10)]
+    assert c.run_until_committed(eids)
+    c.run(1000)  # let heartbeats propagate commit
+    for n in c.nodes.values():
+        assert n.committed_commands() == [f"cmd{i}" for i in range(10)]
+    c.check_log_consistency()
+
+
+def test_commit_via_follower_forwarding():
+    c = Cluster(n=3, protocol="raft", seed=13)
+    lead = c.run_until_leader()
+    follower = [n for n in c.nodes if n != lead][0]
+    eid = c.submit("fwd-cmd", via=follower)
+    assert c.run_until_committed([eid])
+    assert c.metrics.traces[eid].mode == "classic"
+
+
+def test_leader_failover():
+    c = Cluster(n=5, protocol="raft", seed=14)
+    lead = c.run_until_leader()
+    e1 = c.submit("before-crash", via=lead)
+    assert c.run_until_committed([e1])
+    c.crash(lead)
+    new_lead = None
+    for _ in range(10):
+        c.run(2000)
+        new_lead = c.leader()
+        if new_lead is not None and new_lead != lead:
+            break
+    assert new_lead is not None and new_lead != lead
+    e2 = c.submit("after-crash", via=new_lead)
+    assert c.run_until_committed([e2])
+    c.check_log_consistency()
+    # Committed entry survived the failover.
+    assert "before-crash" in c.nodes[new_lead].committed_commands()
+
+
+def test_restart_preserves_log():
+    c = Cluster(n=3, protocol="raft", seed=15)
+    lead = c.run_until_leader()
+    eids = [c.submit(f"x{i}", via=lead) for i in range(5)]
+    assert c.run_until_committed(eids)
+    victim = [n for n in c.nodes if n != lead][0]
+    pre_log = [s.entry.entry_id for s in c.nodes[victim].log]
+    c.crash(victim)
+    c.run(1000)
+    c.restart(victim)
+    c.run(3000)
+    post_log = [s.entry.entry_id for s in c.nodes[victim].log]
+    assert post_log[: len(pre_log)] == pre_log
+    assert c.nodes[victim].commit_index >= 5
+    c.check_log_consistency()
+
+
+def test_minority_partition_cannot_commit():
+    c = Cluster(n=5, protocol="raft", seed=16)
+    lead = c.run_until_leader()
+    minority = [lead] + [n for n in c.nodes if n != lead][:1]
+    majority = [n for n in c.nodes if n not in minority]
+    c.partition(minority, majority)
+    eid = c.submit("stuck", via=lead)
+    c.run(3000)
+    t = c.metrics.traces.get(eid)
+    assert t is None or not t.committed, "entry committed without a quorum"
+    # Majority side elects a fresh leader and commits.
+    new_lead = c.leader()
+    assert new_lead in majority
+    e2 = c.submit("moves-on", via=new_lead)
+    assert c.run_until_committed([e2])
+    c.heal()
+    c.run(3000)
+    c.check_log_consistency()
+
+
+def test_membership_add_node():
+    c = Cluster(n=3, protocol="raft", seed=17)
+    lead = c.run_until_leader()
+    eids = [c.submit(f"m{i}", via=lead) for i in range(3)]
+    assert c.run_until_committed(eids)
+    c.add_node("n3")
+    c.run(5000)
+    assert "n3" in c.nodes[lead].members
+    assert c.nodes["n3"].commit_index >= 3, "new node not backfilled"
+    c.check_log_consistency()
+
+
+def test_lossy_network_still_commits():
+    c = Cluster(n=3, protocol="raft", seed=18, loss=0.10, jitter=2.0)
+    lead = c.run_until_leader(20_000)
+    assert lead is not None
+    eids = [c.submit(f"l{i}", via=lead) for i in range(5)]
+    assert c.run_until_committed(eids, 30_000)
+    c.check_log_consistency()
