@@ -1,0 +1,95 @@
+"""Version compatibility shims for the jax API surface we use.
+
+The repo targets the image's pinned jax (0.4.37 today) while staying
+forward-compatible with the stable APIs newer releases promote out of
+``jax.experimental``. Keep every version branch here so call sites stay
+clean.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+_partial_auto_ready = False
+
+
+def ensure_partial_auto_partitioner() -> None:
+    """Make partially-manual shard_map (manual DP x auto TP) compilable.
+
+    Legacy jax's GSPMD path emits ``Sharding`` custom-calls without the
+    manual-subgroup wrapper inside partial-manual regions, and the SPMD
+    partitioner aborts the process on them (``Check failed:
+    target.IsManualSubgroup() == sharding().IsManualSubgroup()``). The
+    Shardy partitioner handles these correctly, so on legacy jax we flip it
+    on (process-wide, once) before building such a computation. Newer jax
+    (with ``jax.shard_map``) needs nothing.
+    """
+    global _partial_auto_ready
+    if _partial_auto_ready or hasattr(jax, "shard_map"):
+        _partial_auto_ready = True
+        return
+    jax.config.update("jax_use_shardy_partitioner", True)
+    _partial_auto_ready = True
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a dict: some versions /
+    partitioners return a per-device list instead."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
+def wsc_in_partial_manual_ok() -> bool:
+    """Whether ``lax.with_sharding_constraint`` may be used inside a
+    partially-manual shard_map body. On legacy jax's GSPMD path the
+    constraint lowers without the manual-subgroup wrapper and trips an
+    SPMD-partitioner check (``IsManualSubgroup`` mismatch), aborting the
+    process. Fine on new jax, and on legacy jax once
+    :func:`ensure_partial_auto_partitioner` has flipped to Shardy."""
+    return hasattr(jax, "shard_map") or _partial_auto_ready
+
+
+def axis_size(name) -> int:
+    """``lax.axis_size`` with fallback to ``psum(1, name)`` for jax
+    versions that predate it (the psum of a literal 1 folds to the static
+    axis size inside shard_map/pmap)."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` (>= 0.6 API) with fallback to
+    ``jax.experimental.shard_map.shard_map`` (<= 0.4/0.5 API).
+
+    ``axis_names`` is the set of mesh axes the body is MANUAL over (the new
+    API's parameter); the legacy API expresses the same thing inversely via
+    ``auto`` = all mesh axes not in ``axis_names``. ``check_vma`` maps to the
+    legacy ``check_rep``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as legacy_sm
+
+    kwargs = {}
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -31,11 +31,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 def _axis_size(axis_names: Sequence[str]) -> int:
     m = 1
     for a in axis_names:
-        m *= lax.axis_size(a)
+        m *= compat.axis_size(a)
     return m
 
 
@@ -102,8 +104,21 @@ def voted_psum(
     """
     m = _axis_size(axis_names)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    summed = lax.psum((*leaves, vote), axis_names)
-    *summed_leaves, n_yes = summed
+    # Pack every leaf AND the vote into one flat f32 buffer so the lowered
+    # HLO contains exactly one all-reduce op by construction — tuple psum
+    # lowers to one all-reduce per operand and not every backend's combiner
+    # pass re-merges them.
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).ravel() for l in leaves] + [vote.astype(jnp.float32).reshape(1)]
+    )
+    summed = lax.psum(flat, axis_names)
+    summed_leaves = []
+    off = 0
+    for l in leaves:
+        n = l.size
+        summed_leaves.append(summed[off : off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    n_yes = summed[off]
     committed = n_yes >= jnp.asarray(fast_quorum_size(m), dtype=n_yes.dtype)
     return jax.tree_util.tree_unflatten(treedef, summed_leaves), n_yes, committed
 

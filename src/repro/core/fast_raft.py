@@ -38,6 +38,12 @@ Design decisions (and the safety arguments behind them):
   provably did not commit and are optionally re-appended for liveness.
 * EntryId-level dedup makes every fallback idempotent: a command commits at
   most once no matter how many tracks and retries it traveled.
+* Batched fast track: a client burst rides ONE multi-slot FastPropose
+  window (entries for consecutive slots), acceptors vote per-slot FCFS and
+  reply with ONE batched FastVote, and the leader's resulting
+  finalizations leave as batched FastFinalize windows — so an N-command
+  burst costs the same 2 message rounds as a single command. Safety is
+  unchanged: a window is semantically exactly N single-slot proposals.
 
 Known liveness (not safety) gap, matching the paper's own observations about
 lossy networks: if the leader's own slot was claimed by a conflicting
@@ -99,6 +105,9 @@ class FastRaftNode(RaftNode):
         self.tallies: Dict[int, _SlotTally] = {}
         # Leader: finalized-but-non-contiguous slots awaiting their gap.
         self._finalized_held: Dict[int, float] = {}
+        # When set (window-vote handling), finalized slots accumulate here
+        # and are broadcast as batched FastFinalize windows afterwards.
+        self._finalize_accum: Optional[List[Tuple[int, Entry]]] = None
         # Liveness nicety: re-propose sub-threshold entries seen during
         # recovery (safe — dedup by entry_id).
         self.readopt_uncommitted = True
@@ -116,42 +125,74 @@ class FastRaftNode(RaftNode):
     def _non_leader_submit(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
         if len(self.inflight) >= self.config.max_fast_inflight or self.leader_id is None:
             return super()._non_leader_submit(command, entry_id, now)
-        index = self._choose_fast_index()
-        entry = Entry(term=self.term, command=command, entry_id=entry_id, proposed_at=now)
-        self.inflight[entry_id] = _InflightProposal(index, command, entry_id, now)
-        self._count("fast_proposals")
+        return self._fast_propose_window([(command, entry_id)], now)
 
-        # Tentatively accept our own proposal (we are one of the M acceptors).
-        self.fast_slots[index] = Slot(entry.clone(), SlotState.TENTATIVE)
-        out: Outputs = [
-            (p, FastPropose(term=self.term, src=self.id, index=index, entry=entry))
-            for p in self.peers()
-        ]
-        out.append(
-            (
-                self.leader_id,
-                FastVote(term=self.term, src=self.id, index=index,
-                         entry_id=entry_id, voter=self.id),
+    def _non_leader_submit_batch(self, pairs, now: float) -> Outputs:
+        if (
+            len(self.inflight) + len(pairs) > self.config.max_fast_inflight
+            or self.leader_id is None
+        ):
+            return super()._non_leader_submit_batch(pairs, now)
+        out: Outputs = []
+        w = max(1, self.config.max_batch_entries)
+        for i in range(0, len(pairs), w):
+            out += self._fast_propose_window(pairs[i : i + w], now)
+        return out
+
+    def _fast_propose_window(self, pairs, now: float) -> Outputs:
+        """One fast-track round 1 for consecutive slots: a single FastPropose
+        (with a window for >1 entries) to all peers plus our own batched
+        vote to the leader."""
+        base = self._choose_fast_index(len(pairs))
+        entries = []
+        for off, (command, entry_id) in enumerate(pairs):
+            index = base + off
+            entry = Entry(term=self.term, command=command, entry_id=entry_id,
+                          proposed_at=now)
+            self.inflight[entry_id] = _InflightProposal(index, command, entry_id, now)
+            # Tentatively accept our own proposal (we are one of the M acceptors).
+            self.fast_slots[index] = Slot(entry.clone(), SlotState.TENTATIVE)
+            entries.append(entry)
+        self._count("fast_proposals", len(entries))
+
+        if len(entries) == 1:
+            propose = FastPropose(term=self.term, src=self.id, index=base,
+                                  entry=entries[0])
+        else:
+            propose = FastPropose(term=self.term, src=self.id, index=base,
+                                  window=tuple(entries))
+        out: Outputs = [(p, propose) for p in self.peers()]
+        if self.role is Role.LEADER:
+            out += self._apply_window_votes(
+                base, [e.entry_id for e in entries], self.id, now
             )
-        )
+        elif len(entries) == 1:
+            out.append((self.leader_id,
+                        FastVote(term=self.term, src=self.id, index=base,
+                                 entry_id=entries[0].entry_id, voter=self.id)))
+        else:
+            out.append((self.leader_id,
+                        FastVote(term=self.term, src=self.id, index=base, voter=self.id,
+                                 window_votes=tuple(e.entry_id for e in entries))))
         self._count("msgs_out", len(out))
         return out
 
-    def _choose_fast_index(self) -> int:
+    def _choose_fast_index(self, span: int = 1) -> int:
+        """Reserve ``span`` consecutive slots above everything we know of."""
         hi = max(
             self.last_log_index(),
             max(self.fast_slots.keys(), default=0),
             self._next_fast_hint,
         )
-        self._next_fast_hint = hi + 1
+        self._next_fast_hint = hi + span
         return hi + 1
 
-    def _leader_append(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
+    def _append_and_replicate(self, pairs, now: float) -> Outputs:
         # Held finalized slots take their indexes before classic traffic;
         # classic appends then shadow any remaining overlay reservations at
         # or below their index (displaced proposals re-route via timeout).
         self._merge_finalized(now)
-        out = super()._leader_append(command, entry_id, now)
+        out = super()._append_and_replicate(pairs, now)
         for index in list(self.fast_slots.keys()):
             if index <= self.last_log_index():
                 self.fast_slots.pop(index)
@@ -161,16 +202,37 @@ class FastRaftNode(RaftNode):
     # ------------------------------------------------------------- acceptors
 
     def _handle_FastPropose(self, msg: FastPropose, now: float) -> Outputs:
-        if msg.term < self.term or msg.entry is None:
+        if msg.term < self.term:
             return []
-        index, entry = msg.index, msg.entry
+        window = msg.window if msg.window else (
+            (msg.entry,) if msg.entry is not None else ()
+        )
+        if not window:
+            return []
+        # Per-slot first-come-first-served acceptance, exactly as if the
+        # window had arrived as len(window) single proposals; the reply is
+        # ONE (possibly batched) FastVote.
+        accepted: List[Optional[EntryId]] = []
+        for off, entry in enumerate(window):
+            accepted.append(self._accept_fast_slot(msg.index + off, entry))
+        if not any(eid is not None for eid in accepted):
+            return []
+        if len(accepted) == 1:
+            return self._emit_fast_vote(msg.index, accepted[0], now)
+        return self._emit_fast_window_vote(msg.index, accepted, now)
+
+    def _accept_fast_slot(self, index: int, entry: Entry) -> Optional[EntryId]:
+        """FCFS acceptance for one slot; returns the entry_id we vote for
+        (None = refuse)."""
+        if index <= self.snapshot_last_index:
+            return None  # compacted: slot is committed history
         authoritative = self.slot(index)
         if authoritative is not None:
             # Classic track already owns this index. Vote only if it's the
             # same entry (harmless); otherwise the proposal is dead here.
             if not authoritative.entry.same_entry(entry):
                 self._count("fast_rejects")
-                return []
+                return None
         else:
             held = self.fast_slots.get(index)
             if held is None:
@@ -178,10 +240,12 @@ class FastRaftNode(RaftNode):
                 self._next_fast_hint = max(self._next_fast_hint, index)
             elif not held.entry.same_entry(entry):
                 self._count("fast_conflicts")
-                return []  # first-come-first-served: keep existing vote
-        return self._emit_fast_vote(index, entry.entry_id, now)
+                return None  # first-come-first-served: keep existing vote
+        return entry.entry_id
 
-    def _emit_fast_vote(self, index: int, entry_id: EntryId, now: float) -> Outputs:
+    def _emit_fast_vote(self, index: int, entry_id: Optional[EntryId], now: float) -> Outputs:
+        if entry_id is None:
+            return []
         if self.role is Role.LEADER:
             return self._record_fast_vote(index, entry_id, self.id, now)
         if self.leader_id is None:
@@ -194,12 +258,76 @@ class FastRaftNode(RaftNode):
             )
         ]
 
+    def _emit_fast_window_vote(
+        self, base: int, accepted: List[Optional[EntryId]], now: float
+    ) -> Outputs:
+        if self.role is Role.LEADER:
+            return self._apply_window_votes(base, accepted, self.id, now)
+        if self.leader_id is None:
+            return []
+        return [
+            (
+                self.leader_id,
+                FastVote(term=self.term, src=self.id, index=base, voter=self.id,
+                         window_votes=tuple(accepted)),
+            )
+        ]
+
     # ---------------------------------------------------------- leader side
 
     def _handle_FastVote(self, msg: FastVote, now: float) -> Outputs:
-        if self.role is not Role.LEADER or msg.term < self.term or msg.entry_id is None:
+        if self.role is not Role.LEADER or msg.term < self.term:
+            return []
+        if msg.window_votes:
+            return self._apply_window_votes(
+                msg.index, list(msg.window_votes), msg.voter, now
+            )
+        if msg.entry_id is None:
             return []
         return self._record_fast_vote(msg.index, msg.entry_id, msg.voter, now)
+
+    def _apply_window_votes(
+        self, base: int, votes: List[Optional[EntryId]], voter: NodeId, now: float
+    ) -> Outputs:
+        """Record a batched vote; coalesce any resulting finalizations into
+        batched FastFinalize windows instead of one broadcast per slot."""
+        outer = self._finalize_accum is None
+        if outer:
+            self._finalize_accum = []
+        out: Outputs = []
+        try:
+            for off, eid in enumerate(votes):
+                if eid is not None:
+                    out += self._record_fast_vote(base + off, eid, voter, now)
+        finally:
+            if outer:
+                acc, self._finalize_accum = self._finalize_accum, None
+                out += self._broadcast_finalize_windows(acc)
+        return out
+
+    def _broadcast_finalize_windows(self, acc: List[Tuple[int, Entry]]) -> Outputs:
+        if not acc:
+            return []
+        acc.sort(key=lambda kv: kv[0])
+        runs: List[List[Tuple[int, Entry]]] = [[acc[0]]]
+        for index, entry in acc[1:]:
+            if index == runs[-1][-1][0] + 1:
+                runs[-1].append((index, entry))
+            else:
+                runs.append([(index, entry)])
+        out: Outputs = []
+        for run in runs:
+            base = run[0][0]
+            if len(run) == 1:
+                msg = FastFinalize(term=self.term, src=self.id, index=base,
+                                   entry=run[0][1], leader_commit=self.commit_index)
+            else:
+                msg = FastFinalize(term=self.term, src=self.id, index=base,
+                                   window=tuple(e for _, e in run),
+                                   leader_commit=self.commit_index)
+            out += [(p, msg) for p in self.peers()]
+        self._count("msgs_out", len(out))
+        return out
 
     def _record_fast_vote(
         self, index: int, entry_id: EntryId, voter: NodeId, now: float
@@ -242,6 +370,11 @@ class FastRaftNode(RaftNode):
             self._finalized_held[index] = now
             self._count("fast_holds")
         self._merge_finalized(now)
+        if self._finalize_accum is not None:
+            # Window-vote context: defer the broadcast so consecutive slots
+            # finalized by one batched vote leave as one FastFinalize window.
+            self._finalize_accum.append((index, entry))
+            return []
         out: Outputs = [
             (
                 p,
@@ -278,12 +411,18 @@ class FastRaftNode(RaftNode):
     # ------------------------------------------------------------ finalize
 
     def _handle_FastFinalize(self, msg: FastFinalize, now: float) -> Outputs:
-        if msg.term < self.term or msg.entry is None:
+        if msg.term < self.term:
             return []
-        index, entry = msg.index, msg.entry
-        if self.slot(index) is None and entry.entry_id not in self._entry_index:
-            # Leader's finalize overrides any conflicting tentative entry.
-            self.fast_slots[index] = Slot(entry.clone(), SlotState.FINALIZED)
+        window = msg.window if msg.window else (
+            (msg.entry,) if msg.entry is not None else ()
+        )
+        for off, entry in enumerate(window):
+            index = msg.index + off
+            if index <= self.snapshot_last_index:
+                continue  # already compacted == committed
+            if self.slot(index) is None and entry.entry_id not in self._entry_index:
+                # Leader's finalize overrides any conflicting tentative entry.
+                self.fast_slots[index] = Slot(entry.clone(), SlotState.FINALIZED)
         self._merge_finalized(now)
         if msg.leader_commit > self.commit_index:
             self._advance_commit(msg.leader_commit, now)
@@ -406,6 +545,13 @@ class FastRaftNode(RaftNode):
             e = entries[eid]
             if eid in self._entry_index:
                 continue
+            if index <= self.snapshot_last_index:
+                # The slot is compacted committed history holding a different
+                # entry — a conflicting fast commit there is impossible, so
+                # this candidate provably never committed. Re-append it at a
+                # fresh index for liveness.
+                displaced.append(e)
+                continue
             if index <= self.last_log_index():
                 cur = self.slot(index)
                 if cur.entry.same_entry(e):
@@ -455,6 +601,18 @@ class FastRaftNode(RaftNode):
         self._merge_finalized(now)
         return out
 
+    def _install_snapshot(self, snap, now: float) -> None:
+        super()._install_snapshot(snap, now)
+        # Overlay reservations at compacted indexes are dead: those slots
+        # are committed history now. Displaced proposals re-route via the
+        # inflight timeout (dedup by entry_id keeps this idempotent).
+        for index in list(self.fast_slots.keys()):
+            if index <= self.snapshot_last_index:
+                del self.fast_slots[index]
+                self._finalized_held.pop(index, None)
+                self.tallies.pop(index, None)
+        self._merge_finalized(now)
+
     def restart(self, now: float) -> None:
         # fast_slots (and the durable votes they imply) persist across
         # crashes; leader tallies and proposer inflight state are volatile.
@@ -462,3 +620,4 @@ class FastRaftNode(RaftNode):
         self.tallies = {}
         self.inflight = {}
         self._finalized_held = {}
+        self._finalize_accum = None

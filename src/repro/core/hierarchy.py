@@ -46,6 +46,7 @@ class HierarchicalCluster:
         global_loss: float = 0.0,
         global_latency: float = 10.0,
         jitter: float = 0.0,
+        msg_overhead: float = 0.0,
         tick_interval: float = 10.0,
         config: Optional[RaftConfig] = None,
         global_config: Optional[RaftConfig] = None,
@@ -67,6 +68,7 @@ class HierarchicalCluster:
                 loss=local_loss,
                 base_latency=local_latency,
                 jitter=jitter,
+                msg_overhead=msg_overhead,
                 config=config,
                 tick_interval=tick_interval,
                 node_prefix=f"{pod}h",
@@ -229,6 +231,23 @@ class HierarchicalCluster:
         if lead is not None:
             self.pods[pod].crash(lead)
         return lead
+
+    def isolate_pod_host(self, pod: str, host: NodeId) -> None:
+        """Chaos hook: partition one host away from the rest of its pod
+        (e.g. so the pod leader compacts past it and catch-up must go
+        through InstallSnapshot once healed)."""
+        others = [h for h in self.pods[pod].nodes if h != host]
+        self.pods[pod].partition([host], others)
+
+    def heal_pod_hosts(self, pod: str) -> None:
+        self.pods[pod].heal()
+
+    def compact_pod(self, pod: str) -> None:
+        """Chaos hook: force every live host in the pod to compact its
+        applied prefix right now (snapshot-during-partition scenarios)."""
+        for node in self.pods[pod].nodes.values():
+            if node.alive:
+                node.compact()
 
     def partition_pod(self, pod: str) -> None:
         """Cut the pod's global member off (simulates inter-pod link failure)

@@ -9,6 +9,16 @@ execution of the node code.
 
 The class is written to be subclassed by :class:`repro.core.fast_raft.
 FastRaftNode`; the hooks it overrides are marked ``# FastRaft hook``.
+
+Replication is batched and pipelined: client bursts coalesce into
+multi-entry AppendEntries batches (``RaftConfig.max_batch_entries``,
+optionally buffered for ``batch_window`` sim-ms), and a leader keeps up to
+``max_inflight_batches`` un-acked batches in flight per follower — each
+heartbeat re-opens the pipeline from ``next_index``, doubling as
+retransmission. The committed prefix compacts into a
+:class:`repro.core.types.Snapshot` every ``snapshot_threshold`` applied
+entries; followers that fall behind the snapshot horizon are caught up via
+InstallSnapshot instead of log replay.
 """
 from __future__ import annotations
 
@@ -24,6 +34,8 @@ from repro.core.types import (
     Entry,
     EntryId,
     ForwardOperation,
+    InstallSnapshotArgs,
+    InstallSnapshotReply,
     Message,
     NodeId,
     RequestVoteArgs,
@@ -31,6 +43,7 @@ from repro.core.types import (
     Role,
     Slot,
     SlotState,
+    Snapshot,
     majority,
 )
 
@@ -48,6 +61,23 @@ class RaftConfig:
     fast_track: bool = False
     fast_vote_timeout: float = 120.0  # slot falls back to classic after this
     max_fast_inflight: int = 64
+    # Batched + pipelined replication:
+    #   max_batch_entries   — entries per AppendEntries / FastPropose window.
+    #   max_inflight_batches — un-acked AppendEntries batches a leader keeps
+    #       in flight per follower between heartbeats (pipeline depth; the
+    #       window re-opens from next_index at every heartbeat, which doubles
+    #       as retransmission).
+    #   batch_window — leader-side coalescing delay (sim-ms): client commands
+    #       buffer up to this long (or max_batch_entries) before one
+    #       append+broadcast. 0.0 = replicate immediately (seed behavior).
+    max_batch_entries: int = 64
+    max_inflight_batches: int = 4
+    batch_window: float = 0.0
+    # Snapshot / log compaction: once the applied prefix since the last
+    # snapshot reaches this many entries, fold it into a Snapshot and drop it
+    # from the log. 0 = never compact (seed behavior). Followers whose
+    # next_index falls below the snapshot receive InstallSnapshot.
+    snapshot_threshold: int = 0
 
 
 class RaftNode:
@@ -72,7 +102,10 @@ class RaftNode:
         # Persistent state.
         self.term = 0
         self.voted_for: Optional[NodeId] = None
-        self.log: List[Slot] = []  # log[p] holds index p+1
+        # log[p] holds absolute index snapshot_last_index + p + 1; the
+        # committed prefix up to ``snapshot`` has been compacted away.
+        self.log: List[Slot] = []
+        self.snapshot: Optional[Snapshot] = None
 
         # Volatile state.
         self.role = Role.FOLLOWER
@@ -83,6 +116,27 @@ class RaftNode:
         # Leader state.
         self.next_index: Dict[NodeId, int] = {}
         self.match_index: Dict[NodeId, int] = {}
+        # Replication pipeline: un-acked entry batches per follower and the
+        # optimistic next send position (>= next_index). Both reset at every
+        # heartbeat broadcast, which doubles as retransmission after loss.
+        self._inflight: Dict[NodeId, int] = {}
+        self._pipe_next: Dict[NodeId, int] = {}
+
+        # Leader-side client-command coalescing (config.batch_window > 0).
+        self._batch_buffer: List[Tuple[Any, EntryId]] = []
+        self._buffered_ids: set = set()
+        self._batch_deadline = 0.0
+        # Persistence hooks, wired by the harness (e.g. checkpoint.
+        # SnapshotStore): snapshot_sink(node_id, snapshot) after each
+        # compaction; hard_state_sink(node_id, term, voted_for, seq)
+        # whenever Raft hard state changes — term/voted_for MUST be durable
+        # before acting on them (double-vote safety) and seq must never
+        # regress (EntryId dedup safety), so a host replacement restoring
+        # only persisted state stays correct.
+        self.snapshot_sink: Optional[Callable[[NodeId, Snapshot], None]] = None
+        self.hard_state_sink: Optional[
+            Callable[[NodeId, int, Optional[NodeId], int], None]
+        ] = None
 
         # Candidate state.
         self.votes_received: Dict[NodeId, RequestVoteReply] = {}
@@ -107,17 +161,26 @@ class RaftNode:
     def quorum(self) -> int:
         return majority(self.m)
 
+    @property
+    def snapshot_last_index(self) -> int:
+        return self.snapshot.last_index if self.snapshot is not None else 0
+
     def last_log_index(self) -> int:
-        return len(self.log)
+        return self.snapshot_last_index + len(self.log)
 
     def term_at(self, index: int) -> int:
         if index == 0:
             return 0
-        return self.log[index - 1].entry.term
+        if self.snapshot is not None and index <= self.snapshot.last_index:
+            return self.snapshot.entries[index - 1].term
+        return self.log[index - self.snapshot_last_index - 1].entry.term
 
     def slot(self, index: int) -> Optional[Slot]:
-        if 1 <= index <= len(self.log):
-            return self.log[index - 1]
+        """The live (uncompacted) slot at absolute ``index``; None if the
+        index is beyond the log OR compacted into the snapshot."""
+        p = index - self.snapshot_last_index
+        if 1 <= p <= len(self.log):
+            return self.log[p - 1]
         return None
 
     def peers(self) -> List[NodeId]:
@@ -125,7 +188,12 @@ class RaftNode:
 
     def next_seq(self) -> int:
         self._seq += 1
+        self._persist_hard_state()
         return self._seq
+
+    def _persist_hard_state(self) -> None:
+        if self.hard_state_sink is not None:
+            self.hard_state_sink(self.id, self.term, self.voted_for, self._seq)
 
     def _count(self, kind: str, n: int = 1) -> None:
         if self.metrics is not None:
@@ -143,14 +211,24 @@ class RaftNode:
         if term > self.term:
             self.term = term
             self.voted_for = None
+            self._persist_hard_state()
         self.role = Role.FOLLOWER
         self.votes_received = {}
+        # Commands coalescing in the leader batch buffer were never appended;
+        # put them back on the client queue so they re-route to the new leader.
+        if self._batch_buffer:
+            self._pending_client.extend(self._batch_buffer)
+            self._batch_buffer = []
+            self._buffered_ids.clear()
+        self._inflight = {}
+        self._pipe_next = {}
         self._reset_election_timer(now)
 
     def _become_candidate(self, now: float) -> Outputs:
         self.term += 1
         self.role = Role.CANDIDATE
         self.voted_for = self.id
+        self._persist_hard_state()
         self.leader_id = None
         self.votes_received = {}
         self._reset_election_timer(now)
@@ -179,6 +257,8 @@ class RaftNode:
         self.leader_id = self.id
         self.next_index = {p: self.last_log_index() + 1 for p in self.peers()}
         self.match_index = {p: 0 for p in self.peers()}
+        self._inflight = {}
+        self._pipe_next = {}
         self.next_heartbeat = now  # fire immediately
         self._count("leader_elected")
         if self.metrics is not None:
@@ -222,6 +302,8 @@ class RaftNode:
             return []
         out: Outputs = []
         if self.role is Role.LEADER:
+            if self._batch_buffer and now >= self._batch_deadline:
+                out += self._flush_batch(now)
             if now >= self.next_heartbeat:
                 self.next_heartbeat = now + self.config.heartbeat_interval
                 out += self._broadcast_append_entries(now)
@@ -256,6 +338,7 @@ class RaftNode:
             if up_to_date and self.voted_for in (None, msg.candidate_id):
                 grant = True
                 self.voted_for = msg.candidate_id
+                self._persist_hard_state()
                 self._reset_election_timer(now)
         reply = RequestVoteReply(
             term=self.term,
@@ -275,25 +358,87 @@ class RaftNode:
     # -- AppendEntries
 
     def _broadcast_append_entries(self, now: float) -> Outputs:
+        """(Re)send replication traffic to every follower.
+
+        Each broadcast re-opens the per-follower pipeline from next_index —
+        the known-replicated point — so a broadcast doubles as retransmission
+        of batches lost since the last one. Followers with nothing to pull
+        get a plain heartbeat.
+        """
         out: Outputs = []
         for p in self.peers():
-            out.append((p, self._make_append_entries(p)))
+            self._inflight[p] = 0
+            self._pipe_next[p] = self.next_index.get(p, self.last_log_index() + 1)
+            msgs = self._replicate_to_peer(p)
+            if not msgs:
+                msgs = [(p, self._heartbeat_for(p))]
+            out += msgs
         self._count("msgs_out", len(out))
         return out
 
-    def _make_append_entries(self, peer: NodeId) -> AppendEntriesArgs:
-        ni = self.next_index.get(peer, self.last_log_index() + 1)
-        prev = ni - 1
-        entries = tuple(s.clone() for s in self.log[prev : prev + 64])
+    def _heartbeat_for(self, peer: NodeId) -> AppendEntriesArgs:
+        prev = min(
+            self.next_index.get(peer, self.last_log_index() + 1) - 1,
+            self.last_log_index(),
+        )
         return AppendEntriesArgs(
             term=self.term,
             src=self.id,
             leader_id=self.id,
             prev_log_index=prev,
             prev_log_term=self.term_at(prev),
-            entries=entries,
+            entries=(),
             leader_commit=self.commit_index,
         )
+
+    def _replicate_to_peer(self, peer: NodeId) -> Outputs:
+        """Entry-bearing traffic for one follower: consecutive AppendEntries
+        batches of <= max_batch_entries, pipelined up to max_inflight_batches
+        outstanding — or one InstallSnapshot when the follower's next entry
+        was compacted away."""
+        ni = self.next_index.get(peer, self.last_log_index() + 1)
+        if self.snapshot is not None and ni <= self.snapshot.last_index:
+            if self._inflight.get(peer, 0) > 0:
+                return []  # one snapshot in flight at a time
+            self._inflight[peer] = 1
+            self._count("snapshots_sent")
+            return [
+                (
+                    peer,
+                    InstallSnapshotArgs(
+                        term=self.term,
+                        src=self.id,
+                        leader_id=self.id,
+                        snapshot=self.snapshot.clone(),
+                        leader_commit=self.commit_index,
+                    ),
+                )
+            ]
+        out: Outputs = []
+        batch = max(1, self.config.max_batch_entries)
+        depth = max(1, self.config.max_inflight_batches)
+        start = max(ni, self._pipe_next.get(peer, ni))
+        while start <= self.last_log_index() and self._inflight.get(peer, 0) < depth:
+            lo = start - self.snapshot_last_index - 1  # list position
+            entries = tuple(s.clone() for s in self.log[lo : lo + batch])
+            out.append(
+                (
+                    peer,
+                    AppendEntriesArgs(
+                        term=self.term,
+                        src=self.id,
+                        leader_id=self.id,
+                        prev_log_index=start - 1,
+                        prev_log_term=self.term_at(start - 1),
+                        entries=entries,
+                        leader_commit=self.commit_index,
+                    ),
+                )
+            )
+            self._inflight[peer] = self._inflight.get(peer, 0) + 1
+            start += len(entries)
+            self._pipe_next[peer] = start
+        return out
 
     def _handle_AppendEntriesArgs(self, msg: AppendEntriesArgs, now: float) -> Outputs:
         if msg.term < self.term:
@@ -307,8 +452,9 @@ class RaftNode:
         deferred: Outputs = self._flush_pending(now) if first_leader_contact else []
 
         # Consistency check. Tentative slots don't count as matching history:
-        # only CLASSIC/FINALIZED slots anchor prev_log_term.
-        if msg.prev_log_index > 0:
+        # only CLASSIC/FINALIZED slots anchor prev_log_term. A prev inside
+        # our snapshot is committed history and matches by definition.
+        if msg.prev_log_index > self.snapshot_last_index:
             s = self.slot(msg.prev_log_index)
             if s is None or (
                 s.entry.term != msg.prev_log_term and s.state is not SlotState.TENTATIVE
@@ -326,6 +472,8 @@ class RaftNode:
         # Append / overwrite.
         for k, incoming in enumerate(msg.entries):
             idx = msg.prev_log_index + 1 + k
+            if idx <= self.snapshot_last_index:
+                continue  # compacted == committed; nothing to reconcile
             cur = self.slot(idx)
             if cur is not None and cur.entry.term == incoming.entry.term and cur.entry.same_entry(incoming.entry):
                 # Matching entry: possibly upgrade state (tentative->classic).
@@ -351,12 +499,26 @@ class RaftNode:
         if self.role is not Role.LEADER or msg.term < self.term:
             return []
         if msg.success:
+            self._inflight[msg.src] = max(0, self._inflight.get(msg.src, 0) - 1)
             self.match_index[msg.src] = max(self.match_index.get(msg.src, 0), msg.match_index)
             self.next_index[msg.src] = self.match_index[msg.src] + 1
-            return self._leader_advance_commit(now)
-        # Back up (simple decrement; fine at sim scale).
+            self._pipe_next[msg.src] = max(
+                self._pipe_next.get(msg.src, 0), self.next_index[msg.src]
+            )
+            out = self._leader_advance_commit(now)
+            # Keep the pipeline full: the freed inflight slot immediately
+            # carries the next batch if the follower still lags.
+            more = self._replicate_to_peer(msg.src)
+            self._count("msgs_out", len(more))
+            return out + more
+        # Back up (simple decrement; fine at sim scale) and restart the
+        # pipeline from the new next_index.
         self.next_index[msg.src] = max(1, self.next_index.get(msg.src, 1) - 8)
-        return [(msg.src, self._make_append_entries(msg.src))]
+        self._inflight[msg.src] = 0
+        self._pipe_next[msg.src] = self.next_index[msg.src]
+        more = self._replicate_to_peer(msg.src)
+        self._count("msgs_out", len(more))
+        return more
 
     # -- client path
 
@@ -367,13 +529,37 @@ class RaftNode:
         if not self.alive:
             return []
         entry_id = entry_id or EntryId(self.id, self.next_seq())
-        if entry_id in self._entry_index:
+        if entry_id in self._entry_index or entry_id in self._buffered_ids:
             return []  # duplicate retry
         if self.metrics is not None:
             self.metrics.submitted(entry_id, now, mode=self._submit_mode())
         if self.role is Role.LEADER:
             return self._leader_append(command, entry_id, now)
         return self._non_leader_submit(command, entry_id, now)
+
+    def client_request_batch(
+        self, pairs: List[Tuple[Any, EntryId]], now: float
+    ) -> Outputs:
+        """Batched entry point: a burst of client (command, entry_id) pairs
+        submitted together moves as ONE batch — one multi-entry append on a
+        leader, one relay RPC from a classic follower, one multi-slot
+        FastPropose window on a fast-track proposer."""
+        if not self.alive or not pairs:
+            return []
+        fresh = [
+            (c, e)
+            for c, e in pairs
+            if e not in self._entry_index and e not in self._buffered_ids
+        ]
+        if not fresh:
+            return []
+        mode = self._submit_mode()
+        if self.metrics is not None:
+            for _, e in fresh:
+                self.metrics.submitted(e, now, mode=mode)
+        if self.role is Role.LEADER:
+            return self._leader_append_many(fresh, now)
+        return self._non_leader_submit_batch(fresh, now)
 
     def _submit_mode(self) -> str:
         return "classic"  # FastRaft hook
@@ -388,6 +574,25 @@ class RaftNode:
             return [(self.leader_id, fwd)]
         # No leader known yet: queue and flush once one is discovered.
         self._pending_client.append((command, entry_id))
+        return []
+
+    def _non_leader_submit_batch(
+        self, pairs: List[Tuple[Any, EntryId]], now: float
+    ) -> Outputs:
+        # Classic track: one relay RPC carries the whole burst. FastRaft
+        # overrides with a multi-slot FastPropose window.
+        if self.leader_id is not None and self.leader_id != self.id:
+            head_cmd, head_id = pairs[0]
+            fwd = ForwardOperation(
+                term=self.term,
+                src=self.id,
+                command=head_cmd,
+                entry_id=head_id,
+                batch=tuple(pairs[1:]),
+            )
+            self._count("forwards")
+            return [(self.leader_id, fwd)]
+        self._pending_client.extend(pairs)
         return []
 
     def _flush_pending(self, now: float) -> Outputs:
@@ -409,14 +614,54 @@ class RaftNode:
             if self.leader_id and self.leader_id != self.id:
                 return [(self.leader_id, msg)]  # re-forward
             return []
-        return self._leader_append(msg.command, msg.entry_id, now)
+        pairs = [(msg.command, msg.entry_id)] + list(msg.batch)
+        return self._leader_append_many(pairs, now)
 
     def _leader_append(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
-        if entry_id in self._entry_index:
+        return self._leader_append_many([(command, entry_id)], now)
+
+    def _leader_append_many(
+        self, pairs: List[Tuple[Any, EntryId]], now: float
+    ) -> Outputs:
+        """Append a burst of commands. With batch_window > 0 they coalesce in
+        the leader buffer (flushed by size or deadline); otherwise they are
+        appended and replicated immediately in one broadcast."""
+        pairs = [
+            (c, e)
+            for c, e in pairs
+            if e not in self._entry_index and e not in self._buffered_ids
+        ]
+        if not pairs:
             return []
-        e = Entry(term=self.term, command=command, entry_id=entry_id, proposed_at=now)
-        self._append_slot(Slot(e, SlotState.CLASSIC))
-        self._count("proposals")
+        if self.config.batch_window > 0:
+            if not self._batch_buffer:
+                self._batch_deadline = now + self.config.batch_window
+            for c, e in pairs:
+                self._batch_buffer.append((c, e))
+                self._buffered_ids.add(e)
+            if len(self._batch_buffer) >= self.config.max_batch_entries:
+                return self._flush_batch(now)
+            return []
+        return self._append_and_replicate(pairs, now)
+
+    def _flush_batch(self, now: float) -> Outputs:
+        pairs, self._batch_buffer = self._batch_buffer, []
+        self._buffered_ids.clear()
+        return self._append_and_replicate(pairs, now)
+
+    def _append_and_replicate(
+        self, pairs: List[Tuple[Any, EntryId]], now: float
+    ) -> Outputs:
+        appended = False
+        for command, entry_id in pairs:
+            if entry_id in self._entry_index:
+                continue
+            e = Entry(term=self.term, command=command, entry_id=entry_id, proposed_at=now)
+            self._append_slot(Slot(e, SlotState.CLASSIC))
+            self._count("proposals")
+            appended = True
+        if not appended:
+            return []
         # Replicate immediately (don't wait for the heartbeat).
         return self._broadcast_append_entries(now)
 
@@ -424,16 +669,18 @@ class RaftNode:
 
     def _append_slot(self, s: Slot) -> None:
         self.log.append(s)
-        self._entry_index[s.entry.entry_id] = len(self.log)
+        self._entry_index[s.entry.entry_id] = self.last_log_index()
 
     def _truncate_from(self, index: int) -> None:
-        for p in range(index - 1, len(self.log)):
+        start = index - self.snapshot_last_index
+        assert start >= 1, f"cannot truncate compacted prefix at {index}"
+        for p in range(start - 1, len(self.log)):
             self._entry_index.pop(self.log[p].entry.entry_id, None)
-        del self.log[index - 1 :]
+        del self.log[start - 1 :]
 
     def _durable_prefix(self) -> int:
         """Largest index i such that slots 1..i are all non-tentative."""
-        i = 0
+        i = self.snapshot_last_index  # compacted prefix is committed
         for s in self.log:
             if s.state is SlotState.TENTATIVE:
                 break
@@ -461,6 +708,132 @@ class RaftNode:
             self.last_applied += 1
             s = self.slot(self.last_applied)
             self._apply(self.last_applied, s.entry, now)
+        t = self.config.snapshot_threshold
+        if t > 0 and self.last_applied - self.snapshot_last_index >= t:
+            self.compact()
+
+    # ---------------------------------------------------- snapshot/compaction
+
+    def compact(self, upto: Optional[int] = None) -> None:
+        """Fold the applied prefix (up to ``upto``, default everything
+        applied) into ``self.snapshot`` and drop it from the log. Safe at any
+        time: only applied == committed entries are compacted, and followers
+        that still need them are caught up via InstallSnapshot."""
+        upto = self.last_applied if upto is None else min(upto, self.last_applied)
+        if upto <= self.snapshot_last_index:
+            return
+        old = self.snapshot.entries if self.snapshot is not None else ()
+        keep = upto - self.snapshot_last_index
+        entries = tuple(old) + tuple(s.entry for s in self.log[:keep])
+        self.snapshot = Snapshot(
+            last_index=upto,
+            last_term=entries[-1].term,
+            entries=entries,
+            members=tuple(self.members),
+        )
+        del self.log[:keep]
+        self._count("compactions")
+        if self.snapshot_sink is not None:
+            self.snapshot_sink(self.id, self.snapshot)
+
+    def restore_snapshot(self, snap: Snapshot) -> None:
+        """Cold-start from a persisted snapshot (fresh host replacing a lost
+        one): the snapshot becomes the whole committed state. Entries are NOT
+        re-applied through apply_fn — the snapshot IS the applied state."""
+        self.snapshot = snap.clone()
+        self.log = []
+        self._entry_index = {
+            e.entry_id: i + 1 for i, e in enumerate(self.snapshot.entries)
+        }
+        self.commit_index = snap.last_index
+        self.last_applied = snap.last_index
+        self.term = max(self.term, snap.last_term)
+        self.members = sorted(snap.members)
+        # Floor for seq reuse from the snapshot itself; the authoritative
+        # value comes from restore_hard_state (seqs burned after the last
+        # compaction are not in the snapshot).
+        self._seq = max(
+            [self._seq]
+            + [e.entry_id.seq for e in snap.entries if e.entry_id.origin == self.id]
+        )
+
+    def restore_hard_state(
+        self, term: int, voted_for: Optional[NodeId], seq: int
+    ) -> None:
+        """Adopt persisted Raft hard state on a cold start. Without this a
+        replaced node could double-vote in a term it already voted in, or
+        mint EntryIds that collide with ones it burned before the crash."""
+        if term >= self.term:
+            self.term = term
+            self.voted_for = voted_for
+        self._seq = max(self._seq, seq)
+
+    def _install_snapshot(self, snap: Snapshot, now: float) -> None:
+        """Follower-side InstallSnapshot: adopt the leader's compacted prefix.
+
+        Entries above our last_applied are applied through the normal apply
+        path (so state machines and metrics observe them exactly once); any
+        log suffix beyond the snapshot that matches last_term is retained.
+        """
+        if snap.last_index <= self.snapshot_last_index:
+            return
+        # Apply the part of the snapshot we had not applied yet.
+        while self.last_applied < snap.last_index:
+            self.last_applied += 1
+            self._apply(self.last_applied, snap.entries[self.last_applied - 1], now)
+        self.commit_index = max(self.commit_index, snap.last_index)
+        # Retain a matching live suffix; drop everything else.
+        suffix: List[Slot] = []
+        if self.last_log_index() > snap.last_index and self.term_at(
+            snap.last_index
+        ) == snap.last_term:
+            lo = snap.last_index - self.snapshot_last_index
+            if lo >= 0:
+                suffix = self.log[lo:]
+        self.snapshot = snap.clone()
+        self.log = suffix
+        self._entry_index = {
+            e.entry_id: i + 1 for i, e in enumerate(self.snapshot.entries)
+        }
+        for p, s in enumerate(self.log):
+            self._entry_index[s.entry.entry_id] = snap.last_index + p + 1
+        self.members = sorted(snap.members)
+        self._count("snapshots_installed")
+
+    def _handle_InstallSnapshotArgs(self, msg: InstallSnapshotArgs, now: float) -> Outputs:
+        if msg.term < self.term or msg.snapshot is None:
+            return [
+                (msg.src, InstallSnapshotReply(term=self.term, src=self.id, match_index=0))
+            ]
+        self.leader_id = msg.leader_id
+        if self.role is not Role.FOLLOWER:
+            self._become_follower(msg.term, now)
+        self._reset_election_timer(now)
+        snap = msg.snapshot
+        if snap.last_index > self.commit_index:
+            self._install_snapshot(snap, now)
+        if msg.leader_commit > self.commit_index:
+            self._advance_commit(min(msg.leader_commit, self._durable_prefix()), now)
+        # Ack with what we durably hold so the leader resumes AppendEntries
+        # pipelining right above it.
+        match = max(snap.last_index, self.commit_index)
+        return [
+            (msg.src, InstallSnapshotReply(term=self.term, src=self.id, match_index=match))
+        ]
+
+    def _handle_InstallSnapshotReply(self, msg: InstallSnapshotReply, now: float) -> Outputs:
+        if self.role is not Role.LEADER or msg.term < self.term:
+            return []
+        self._inflight[msg.src] = 0
+        if msg.match_index <= 0:
+            return []
+        self.match_index[msg.src] = max(self.match_index.get(msg.src, 0), msg.match_index)
+        self.next_index[msg.src] = self.match_index[msg.src] + 1
+        self._pipe_next[msg.src] = self.next_index[msg.src]
+        out = self._leader_advance_commit(now)
+        more = self._replicate_to_peer(msg.src)
+        self._count("msgs_out", len(more))
+        return out + more
 
     def _apply(self, index: int, entry: Entry, now: float) -> None:
         cmd = entry.command
@@ -489,8 +862,16 @@ class RaftNode:
 
     # --------------------------------------------------------------- debug
 
+    def committed_entries(self) -> List[Entry]:
+        """All committed entries in index order (snapshot prefix + live log
+        up to commit_index)."""
+        out = list(self.snapshot.entries) if self.snapshot is not None else []
+        for p in range(self.commit_index - self.snapshot_last_index):
+            out.append(self.log[p].entry)
+        return out
+
     def committed_commands(self) -> List[Any]:
-        return [self.log[i].entry.command for i in range(self.commit_index)]
+        return [e.command for e in self.committed_entries()]
 
     def log_summary(self) -> List[Tuple[int, str, str]]:
         return [
@@ -501,14 +882,19 @@ class RaftNode:
         self.alive = False
 
     def restart(self, now: float) -> None:
-        """Crash-recovery: persistent state (term, voted_for, log) survives;
-        volatile state resets."""
+        """Crash-recovery: persistent state (term, voted_for, log, snapshot)
+        survives; volatile state resets. Commit/apply resume from the
+        snapshot — its prefix is already durable applied state."""
         self.alive = True
         self.role = Role.FOLLOWER
         self.leader_id = None
         self.votes_received = {}
         self.next_index = {}
         self.match_index = {}
-        self.commit_index = 0
-        self.last_applied = 0
+        self._inflight = {}
+        self._pipe_next = {}
+        self._batch_buffer = []
+        self._buffered_ids = set()
+        self.commit_index = self.snapshot_last_index
+        self.last_applied = self.snapshot_last_index
         self._reset_election_timer(now)

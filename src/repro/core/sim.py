@@ -54,10 +54,21 @@ class Simulation:
 
 
 class LinkModel:
-    def __init__(self, loss: float = 0.0, base_latency: float = 5.0, jitter: float = 0.0):
+    """Directed-link model: drop probability, propagation delay, and an
+    optional per-message serialization cost.
+
+    ``msg_overhead`` models the fixed per-RPC cost (syscall, marshalling,
+    NIC serialization): each message occupies the link for that long before
+    the next one may start, so N unbatched RPCs queue behind each other
+    while one N-entry batch pays the cost once. 0.0 (default) reproduces the
+    seed's pure-latency network exactly."""
+
+    def __init__(self, loss: float = 0.0, base_latency: float = 5.0, jitter: float = 0.0,
+                 msg_overhead: float = 0.0):
         self.loss = loss
         self.base_latency = base_latency
         self.jitter = jitter
+        self.msg_overhead = msg_overhead
 
     def sample_latency(self, rng: random.Random) -> float:
         return self.base_latency + (rng.uniform(0.0, self.jitter) if self.jitter else 0.0)
@@ -77,19 +88,25 @@ class Cluster:
         loss: float = 0.0,
         base_latency: float = 5.0,
         jitter: float = 0.0,
+        msg_overhead: float = 0.0,
         config: Optional[RaftConfig] = None,
         tick_interval: float = 10.0,
         node_prefix: str = "n",
         sim: Optional[Simulation] = None,
+        snapshot_store=None,
     ):
         self.sim = sim or Simulation(seed)
-        self.link = LinkModel(loss, base_latency, jitter)
+        self.link = LinkModel(loss, base_latency, jitter, msg_overhead)
         self.link_overrides: Dict[Tuple[NodeId, NodeId], LinkModel] = {}
+        self._link_busy: Dict[Tuple[NodeId, NodeId], float] = {}
         self.blocked: set = set()  # directed (src, dst) pairs
         self.metrics = Recorder()
         self.tick_interval = tick_interval
         self.config = config or RaftConfig()
         self.protocol = protocol
+        # Optional checkpoint.SnapshotStore: compaction snapshots persist
+        # through it and restart_from_store() restores a node from disk.
+        self.snapshot_store = snapshot_store
 
         cls: Type[RaftNode] = FastRaftNode if protocol == "fastraft" else RaftNode
         ids = [f"{node_prefix}{i}" for i in range(n)]
@@ -97,6 +114,9 @@ class Cluster:
         for i, nid in enumerate(ids):
             node = cls(nid, ids, config=RaftConfig(**vars(self.config)), seed=seed * 1000 + i)
             node.metrics = self.metrics
+            if self.snapshot_store is not None:
+                node.snapshot_sink = self.snapshot_store.save
+                node.hard_state_sink = self.snapshot_store.save_hard_state
             self.nodes[nid] = node
         for node in self.nodes.values():
             node.start(self.sim.now)
@@ -131,6 +151,14 @@ class Cluster:
             self.metrics.count("dropped")
             return
         delay = link.sample_latency(self.sim.rng)
+        if link.msg_overhead > 0:
+            # Per-RPC serialization: messages queue on the directed link, so
+            # a burst of unbatched sends pays the overhead N times while a
+            # batch pays it once. (Skipped entirely at 0 so default-config
+            # schedules are bit-identical to the seed's.)
+            start = max(self.sim.now, self._link_busy.get((src, dst), 0.0))
+            self._link_busy[(src, dst)] = start + link.msg_overhead
+            delay += (start + link.msg_overhead) - self.sim.now
 
         def deliver():
             node = self.nodes.get(dst)
@@ -147,6 +175,16 @@ class Cluster:
         eid = EntryId(via, node.next_seq())
         self.dispatch(via, node.client_request(command, self.sim.now, entry_id=eid))
         return eid
+
+    def submit_batch(self, commands, via: Optional[NodeId] = None) -> List[EntryId]:
+        """Submit a burst of commands as ONE client batch: a single
+        multi-entry append (leader), one relay RPC (classic follower), or a
+        multi-slot FastPropose window (fast track)."""
+        via = via or next(iter(self.nodes))
+        node = self.nodes[via]
+        pairs = [(command, EntryId(via, node.next_seq())) for command in commands]
+        self.dispatch(via, node.client_request_batch(pairs, self.sim.now))
+        return [eid for _, eid in pairs]
 
     def run(self, duration: float, stop: Optional[Callable[[], bool]] = None) -> None:
         self.sim.run_until(self.sim.now + duration, stop)
@@ -175,6 +213,35 @@ class Cluster:
 
     def restart(self, nid: NodeId) -> None:
         self.nodes[nid].restart(self.sim.now)
+
+    def restart_from_store(self, nid: NodeId, seed: int = 4242) -> None:
+        """Replace a node with a FRESH instance restored only from the
+        persisted snapshot store (models losing the host's disk except the
+        checkpoint volume). Requires a snapshot_store."""
+        assert self.snapshot_store is not None, "no snapshot store configured"
+        old = self.nodes[nid]
+        cls: Type[RaftNode] = FastRaftNode if self.protocol == "fastraft" else RaftNode
+        node = cls(nid, old.members, config=RaftConfig(**vars(self.config)), seed=seed)
+        node.metrics = self.metrics
+        node.snapshot_sink = self.snapshot_store.save
+        node.hard_state_sink = self.snapshot_store.save_hard_state
+        snap = self.snapshot_store.load(nid)
+        if snap is not None:
+            node.restore_snapshot(snap)
+        hard = self.snapshot_store.load_hard_state(nid)
+        if hard is not None:
+            # Without this the fresh node could double-vote in a term the
+            # lost host already voted in, or reuse burned EntryId seqs.
+            node.restore_hard_state(*hard)
+        node.start(self.sim.now)
+        self.nodes[nid] = node
+        # The old node's scheduled tick closure looks nodes up by id, so the
+        # replacement is ticked automatically from the next interval on.
+
+    def compact(self, nid: NodeId) -> None:
+        """Chaos hook: force an immediate compaction of nid's applied prefix
+        (e.g. mid-partition, before a follower can catch up classically)."""
+        self.nodes[nid].compact()
 
     def partition(self, *groups: Sequence[NodeId]) -> None:
         """Block all links that cross group boundaries."""

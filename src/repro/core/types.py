@@ -99,6 +99,32 @@ class Slot:
         return Slot(self.entry.clone(), self.state)
 
 
+@dataclasses.dataclass
+class Snapshot:
+    """A compacted committed prefix of the log (indexes 1..last_index).
+
+    The simulator's state machine is the applied command sequence, so the
+    snapshot carries the full committed entries: installing a snapshot
+    re-applies them through ``apply_fn`` on nodes that had not applied them
+    yet, and the carried ``entry_id``s keep client-retry dedup exact across
+    compaction. ``members`` is the cluster config as of ``last_index`` so a
+    follower restored from scratch learns membership too.
+    """
+
+    last_index: int
+    last_term: int
+    entries: Tuple[Entry, ...]
+    members: Tuple[NodeId, ...]
+
+    def clone(self) -> "Snapshot":
+        return Snapshot(
+            self.last_index,
+            self.last_term,
+            tuple(e.clone() for e in self.entries),
+            tuple(self.members),
+        )
+
+
 # --------------------------------------------------------------------------
 # RPC messages. Every message carries ``term`` for the standard Raft term
 # rules. Dataclasses keep the simulator transport trivially serializable.
@@ -144,37 +170,77 @@ class AppendEntriesReply(Message):
 
 
 @dataclasses.dataclass
+class InstallSnapshotArgs(Message):
+    """Leader -> lagging follower whose needed entries were compacted away."""
+
+    leader_id: NodeId = ""
+    snapshot: Optional[Snapshot] = None
+    leader_commit: int = 0
+
+
+@dataclasses.dataclass
+class InstallSnapshotReply(Message):
+    # match_index == snapshot.last_index on success; the leader resumes
+    # normal AppendEntries pipelining from there.
+    match_index: int = 0
+
+
+@dataclasses.dataclass
 class ForwardOperation(Message):
-    """Classic track from a non-leader: relay the command to the leader."""
+    """Classic track from a non-leader: relay the command to the leader.
+
+    ``batch`` carries additional (command, entry_id) pairs coalesced behind
+    the head command, so one relay RPC moves a whole client burst.
+    """
 
     command: Any = None
     entry_id: Optional[EntryId] = None
+    batch: Tuple = ()  # Tuple[Tuple[Any, EntryId], ...]
 
 
 @dataclasses.dataclass
 class FastPropose(Message):
-    """Fast track round 1: proposer -> ALL nodes, targeting a specific slot."""
+    """Fast track round 1: proposer -> ALL nodes.
+
+    Single-slot form: (index, entry). Batched form: ``window`` holds entries
+    for the consecutive slots index, index+1, ... — one RPC proposes a whole
+    multi-slot window and acceptors vote per-slot (first-come-first-served
+    per slot, exactly as if the window had been sent as N proposals).
+    """
 
     index: int = 0
     entry: Optional[Entry] = None
+    window: Tuple[Entry, ...] = ()
 
 
 @dataclasses.dataclass
 class FastVote(Message):
-    """Fast track round 2: acceptor -> leader, voting for (index, entry_id)."""
+    """Fast track round 2: acceptor -> leader, voting for (index, entry_id).
+
+    ``window_votes`` batches votes for the slots of a FastPropose window:
+    entry_ids for consecutive slots starting at ``index`` (None where the
+    acceptor refused that slot).
+    """
 
     index: int = 0
     entry_id: Optional[EntryId] = None
     voter: NodeId = ""
+    window_votes: Tuple[Optional[EntryId], ...] = ()
 
 
 @dataclasses.dataclass
 class FastFinalize(Message):
-    """Fast track round 3: leader -> ALL, the slot reached ceil(3M/4)."""
+    """Fast track round 3: leader -> ALL, the slot reached ceil(3M/4).
+
+    ``window`` batches finalizations for consecutive slots starting at
+    ``index`` (entries for index, index+1, ...), produced when a window vote
+    resolves several slots in one step.
+    """
 
     index: int = 0
     entry: Optional[Entry] = None
     leader_commit: int = 0
+    window: Tuple[Entry, ...] = ()
 
 
 @dataclasses.dataclass

@@ -78,7 +78,7 @@ def decode_attention_splits(q, k, v, kv_len, *, scale=None, blk_s=512,
             jax.ShapeDtypeStruct((B, H, nsplit), jnp.float32),
             jax.ShapeDtypeStruct((B, H, nsplit), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

@@ -105,7 +105,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, scale=None,
             pltpu.VMEM((blk_q,), jnp.float32),
             pltpu.VMEM((blk_q, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -212,7 +212,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, scale=None,
         out_specs=[qspec],
         out_shape=[jax.ShapeDtypeStruct((B, Tq, H, D), q.dtype)],
         scratch_shapes=[pltpu.VMEM((blk_q, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -235,7 +235,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, scale=None,
             pltpu.VMEM((blk_k, D), jnp.float32),
             pltpu.VMEM((blk_k, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

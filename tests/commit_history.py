@@ -1,0 +1,77 @@
+"""Reusable commit-history checker for consensus clusters.
+
+Used by the batched-replication and snapshot chaos tests (and available to
+any future scenario test): one call validates the full committed history of
+a :class:`repro.core.sim.Cluster` against the client-visible contract —
+
+  * agreement      — committed entry sequences are prefix-compatible across
+                     all nodes (snapshot-aware: compacted prefixes count);
+  * no duplicates  — no command commits twice on any node (EntryId dedup
+                     held through every retry / fallback / recovery path);
+  * durability     — no acknowledged commit is lost: every entry the
+                     Recorder observed as committed appears in the longest
+                     committed history;
+  * per-client FIFO — for origins the workload submitted sequentially
+                     (await-between-submissions or single batched windows),
+                     their commands commit in submission (seq) order.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+from repro.core.types import EntryId
+
+
+def check_commit_history(
+    cluster,
+    acked: Sequence[EntryId] = (),
+    fifo_origins: Iterable[str] = (),
+) -> None:
+    histories = {
+        nid: node.committed_entries() for nid, node in cluster.nodes.items()
+    }
+
+    # Agreement: pairwise prefix compatibility by entry identity.
+    items = list(histories.items())
+    for i in range(len(items)):
+        for j in range(i + 1, len(items)):
+            (na, a), (nb, b) = items[i], items[j]
+            k = min(len(a), len(b))
+            ids_a = [e.entry_id for e in a[:k]]
+            ids_b = [e.entry_id for e in b[:k]]
+            assert ids_a == ids_b, (
+                f"committed history divergence between {na} and {nb}:\n"
+                f"  {ids_a}\n  {ids_b}"
+            )
+
+    # No duplicates on any node.
+    for nid, entries in histories.items():
+        ids = [e.entry_id for e in entries]
+        assert len(ids) == len(set(ids)), f"{nid} double-committed: {ids}"
+
+    longest = max(histories.values(), key=len, default=[])
+    longest_ids = {e.entry_id for e in longest}
+
+    # Durability: every acknowledged commit is present.
+    for eid in acked:
+        t = cluster.metrics.traces.get(eid)
+        if t is not None and t.committed:
+            assert eid in longest_ids, f"acknowledged commit lost: {eid}"
+
+    # Per-client FIFO for sequential submitters.
+    for origin in fifo_origins:
+        seqs = [e.entry_id.seq for e in longest if e.entry_id.origin == origin]
+        assert seqs == sorted(seqs), (
+            f"per-client order violated for {origin}: {seqs}"
+        )
+
+
+def committed_acks(cluster, eids: Sequence[EntryId]) -> list:
+    """The subset of ``eids`` the cluster acknowledged (committed per the
+    Recorder) — i.e. the ones a client would consider durable."""
+    return [
+        e
+        for e in eids
+        if cluster.metrics.traces.get(e) is not None
+        and cluster.metrics.traces[e].committed
+    ]

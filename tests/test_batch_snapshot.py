@@ -1,0 +1,288 @@
+"""Batched + pipelined replication and snapshot/log compaction tests.
+
+Covers the new subsystem end to end: multi-entry AppendEntries batches,
+multi-slot FastPropose windows, the leader replication pipeline, compaction
+at ``snapshot_threshold``, InstallSnapshot catch-up, snapshot persistence
+through :class:`repro.checkpoint.manager.SnapshotStore`, and the chaos
+interactions (snapshot while partitioned, restart from snapshot, batched
+fast track under loss). Every scenario validates the full client contract
+via :func:`commit_history.check_commit_history`.
+"""
+import pytest
+
+from commit_history import check_commit_history, committed_acks
+
+from repro.checkpoint.manager import SnapshotStore
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster
+
+
+# --------------------------------------------------------------- batching
+
+
+def test_batched_fast_track_commits_in_one_window():
+    """A whole burst rides ONE FastPropose window and commits on the fast
+    track in the same 2 rounds a single entry takes."""
+    L = 5.0
+    c = Cluster(n=5, protocol="fastraft", seed=71, base_latency=L, jitter=0.0)
+    lead = c.run_until_leader()
+    c.run(500)
+    prop = [n for n in c.nodes if n != c.leader()][0]
+    eids = c.submit_batch([f"w{i}" for i in range(16)], via=prop)
+    assert c.run_until_committed(eids, 60_000)
+    # Entire window fast-committed, none fell back, 2 rounds flat.
+    for e in eids:
+        t = c.metrics.traces[e]
+        assert t.mode == "fast" and t.fallbacks == 0
+        assert t.latency == pytest.approx(2 * L, abs=1e-6)
+    c.run(2000)
+    check_commit_history(c, acked=eids, fifo_origins=[prop])
+
+
+def test_batched_classic_forwarding_single_rpc():
+    """Classic track: a follower burst moves in one relay RPC and one
+    multi-entry AppendEntries broadcast."""
+    c = Cluster(n=5, protocol="raft", seed=72)
+    lead = c.run_until_leader()
+    c.run(500)
+    prop = [n for n in c.nodes if n != c.leader()][0]
+    forwards_before = c.metrics.counters.get("forwards", 0)
+    eids = c.submit_batch([f"f{i}" for i in range(32)], via=prop)
+    assert c.run_until_committed(eids, 60_000)
+    assert c.metrics.counters.get("forwards", 0) == forwards_before + 1
+    c.run(2000)
+    check_commit_history(c, acked=eids, fifo_origins=[prop])
+
+
+def test_leader_batch_window_coalesces_broadcasts():
+    """With batch_window > 0 the leader buffers client commands and appends
+    them as one batch at the flush deadline."""
+    cfg = RaftConfig(batch_window=30.0, max_batch_entries=64)
+    c = Cluster(n=3, protocol="raft", seed=73, config=cfg)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    eids = [c.submit(f"z{i}", via=lead) for i in range(10)]
+    # Nothing appended yet: commands are coalescing in the buffer.
+    assert c.nodes[lead].last_log_index() < 10
+    assert c.run_until_committed(eids, 60_000)
+    c.run(2000)
+    check_commit_history(c, acked=eids, fifo_origins=[lead])
+
+
+def test_pipelined_catchup_of_lagging_follower():
+    """A follower that missed a large log tail catches up through pipelined
+    multi-batch AppendEntries (no snapshot involved)."""
+    cfg = RaftConfig(max_batch_entries=16, max_inflight_batches=4)
+    c = Cluster(n=3, protocol="raft", seed=74, config=cfg)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    victim = [n for n in c.nodes if n != lead][0]
+    c.crash(victim)
+    eids = [c.submit(f"p{i}", via=lead) for i in range(200)]
+    assert c.run_until_committed(eids, 120_000)
+    c.restart(victim)
+    c.run(10_000)
+    assert c.nodes[victim].commit_index >= 200
+    check_commit_history(c, acked=eids, fifo_origins=[lead])
+
+
+def test_fast_track_batches_under_loss():
+    """Batched fast-track windows under 10% loss: every command still
+    commits exactly once (window proposals re-route per-slot through
+    fallback / retry like single proposals do)."""
+    c = Cluster(n=5, protocol="fastraft", seed=75, loss=0.10, jitter=2.0)
+    lead = c.run_until_leader(30_000)
+    assert lead is not None
+    c.run(1000)
+    others = [n for n in c.nodes if n != c.leader()]
+    eids = []
+    for b in range(4):
+        eids += c.submit_batch([f"l{b}_{i}" for i in range(8)],
+                               via=others[b % len(others)])
+        c.run(500)
+    assert c.run_until_committed(eids, 240_000)
+    c.run(5000)
+    check_commit_history(c, acked=eids)
+
+
+# ------------------------------------------------------------- snapshots
+
+
+def test_compaction_truncates_log_and_preserves_state():
+    cfg = RaftConfig(snapshot_threshold=10)
+    c = Cluster(n=3, protocol="fastraft", seed=76, config=cfg)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    eids = [c.submit(f"c{i}", via=lead) for i in range(25)]
+    assert c.run_until_committed(eids, 60_000)
+    c.run(3000)
+    n = c.nodes[lead]
+    assert n.snapshot is not None and n.snapshot.last_index >= 10
+    assert len(n.log) < 25  # prefix actually dropped from the live log
+    assert n.committed_commands()[:25] == [f"c{i}" for i in range(25)]
+    check_commit_history(c, acked=eids, fifo_origins=[lead])
+
+
+def test_restarted_follower_converges_via_install_snapshot():
+    """Acceptance scenario: leader compacts while a follower is down; the
+    restarted follower cannot be caught up by AppendEntries (entries are
+    gone) and converges via InstallSnapshot."""
+    cfg = RaftConfig(snapshot_threshold=10)
+    c = Cluster(n=3, protocol="raft", seed=77, config=cfg)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    victim = [n for n in c.nodes if n != lead][0]
+    c.crash(victim)
+    eids = [c.submit(f"s{i}", via=lead) for i in range(40)]
+    assert c.run_until_committed(eids, 120_000)
+    assert c.nodes[lead].snapshot is not None
+    assert c.nodes[lead].snapshot.last_index > c.nodes[victim].last_log_index()
+    c.restart(victim)
+    c.run(30_000)
+    assert c.metrics.counters.get("snapshots_installed", 0) >= 1
+    assert c.nodes[victim].commit_index >= 40
+    check_commit_history(c, acked=eids, fifo_origins=[lead])
+
+
+def test_snapshot_while_partitioned():
+    """Chaos: a follower is partitioned away, the majority keeps committing
+    and compacts PAST the partition point, then the partition heals — the
+    stale follower must converge (snapshot, then pipelined tail)."""
+    cfg = RaftConfig(snapshot_threshold=8, max_batch_entries=8)
+    c = Cluster(n=5, protocol="fastraft", seed=78, config=cfg)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    isolated = [n for n in c.nodes if n != lead][0]
+    rest = [n for n in c.nodes if n != isolated]
+    c.partition([isolated], rest)
+    eids = [c.submit(f"m{i}", via=lead) for i in range(30)]
+    assert c.run_until_committed(eids, 120_000)
+    assert c.nodes[lead].snapshot is not None
+    c.heal()
+    c.run(30_000)
+    assert c.nodes[isolated].commit_index >= 30
+    check_commit_history(c, acked=eids, fifo_origins=[lead])
+
+
+def test_restart_from_snapshot_store(tmp_path):
+    """Full host replacement: a node loses everything but the persisted
+    snapshot (checkpoint volume), cold-starts from the SnapshotStore, and
+    rejoins the cluster."""
+    store = SnapshotStore(str(tmp_path))
+    cfg = RaftConfig(snapshot_threshold=8)
+    c = Cluster(n=3, protocol="fastraft", seed=79, config=cfg,
+                snapshot_store=store)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    eids = [c.submit(f"r{i}", via=lead) for i in range(20)]
+    assert c.run_until_committed(eids, 60_000)
+    c.run(3000)
+    victim = [n for n in c.nodes if n != c.leader()][0]
+    persisted = store.latest_index(victim)
+    assert persisted >= 8, "compaction never persisted a snapshot"
+    c.crash(victim)
+    c.run(1000)
+    c.restart_from_store(victim)
+    # The fresh node starts from the persisted snapshot, not an empty log.
+    assert c.nodes[victim].commit_index == persisted
+    more = [c.submit(f"post{i}", via=c.leader()) for i in range(5)]
+    assert c.run_until_committed(more, 60_000)
+    c.run(10_000)
+    assert c.nodes[victim].commit_index >= 25
+    check_commit_history(c, acked=eids + more)
+
+
+def test_hierarchy_snapshot_during_pod_partition():
+    """Hierarchy chaos: one pod host is isolated, the pod keeps committing
+    (local + down-propagated global traffic), every live host force-compacts
+    mid-partition, then the partition heals — the stale host converges via
+    InstallSnapshot and global delivery stays prefix-consistent."""
+    from repro.core.hierarchy import HierarchicalCluster
+
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=81,
+                            config=RaftConfig(snapshot_threshold=6))
+    h.bootstrap()
+    pod = h.pod_ids[0]
+    lead = h.pods[pod].leader()
+    stale = [n for n in h.pods[pod].nodes if n != lead][0]
+    h.isolate_pod_host(pod, stale)
+    eids = [h.propose_global(f"g{i}") for i in range(10)]
+    assert h.run_until_globally_committed(eids, 240_000)
+    h.run(10_000)
+    h.compact_pod(pod)
+    h.heal_pod_hosts(pod)
+    h.run(60_000)
+    stale_node = h.pods[pod].nodes[stale]
+    live_lead = h.pods[pod].leader()
+    assert live_lead is not None
+    assert stale_node.commit_index >= h.pods[pod].nodes[live_lead].commit_index - 2
+    h.check_consistency()
+
+
+def test_restore_hard_state_no_seq_reuse_no_double_vote(tmp_path):
+    """Regression: a host replaced via the store must restore Raft hard
+    state (term, voted_for, burned seqs), not just the snapshot. Seqs
+    burned AFTER the last compaction must not be re-minted (a fresh command
+    would collide with an old EntryId and be swallowed as a retry), and the
+    restored term must not regress below the pre-crash term (double-vote)."""
+    store = SnapshotStore(str(tmp_path))
+    cfg = RaftConfig(snapshot_threshold=8)
+    c = Cluster(n=3, protocol="fastraft", seed=82, config=cfg,
+                snapshot_store=store)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    victim = [n for n in c.nodes if n != lead][0]
+    # Burn seqs at the victim BEYOND the compaction horizon: snapshot covers
+    # ~8-16 entries, then more submissions burn higher seqs.
+    eids = [c.submit(f"pre{i}", via=victim) for i in range(12)]
+    assert c.run_until_committed(eids, 60_000)
+    c.run(3000)
+    pre_term = c.nodes[victim].term
+    pre_seq = c.nodes[victim]._seq
+    assert store.latest_index(victim) < 12 or True  # snapshot lags the tail
+    c.crash(victim)
+    c.run(1000)
+    c.restart_from_store(victim)
+    node = c.nodes[victim]
+    assert node._seq >= pre_seq, (node._seq, pre_seq)
+    assert node.term >= pre_term, (node.term, pre_term)
+    # Fresh commands from the restored host must commit as NEW entries.
+    new = [c.submit(f"post{i}", via=victim) for i in range(3)]
+    assert c.run_until_committed(new, 60_000)
+    c.run(5000)
+    log = c.nodes[c.leader()].committed_commands()
+    for i in range(3):
+        assert log.count(f"post{i}") == 1, (i, log)
+    check_commit_history(c, acked=eids + new)
+
+
+def test_snapshot_store_roundtrip(tmp_path):
+    """SnapshotStore serialization is lossless (entry ids, terms, members)."""
+    store = SnapshotStore(str(tmp_path))
+    cfg = RaftConfig(snapshot_threshold=5)
+    c = Cluster(n=3, protocol="raft", seed=80, config=cfg, snapshot_store=store)
+    lead = c.run_until_leader()
+    c.run(500)
+    lead = c.leader()
+    eids = [c.submit(f"d{i}", via=lead) for i in range(12)]
+    assert c.run_until_committed(eids, 60_000)
+    snap = c.nodes[lead].snapshot
+    assert snap is not None
+    loaded = store.load(lead)
+    assert loaded is not None
+    assert loaded.last_index == snap.last_index
+    assert loaded.last_term == snap.last_term
+    assert tuple(loaded.members) == tuple(snap.members)
+    assert [e.entry_id for e in loaded.entries] == [
+        e.entry_id for e in snap.entries
+    ]
+    assert [e.command for e in loaded.entries] == [
+        e.command for e in snap.entries
+    ]

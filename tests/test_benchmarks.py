@@ -53,6 +53,21 @@ def test_throughput_single_proposer_fast_share_high():
     assert r["mean_latency"] <= r2["mean_latency"]
 
 
+def test_throughput_batching_at_least_2x():
+    """Acceptance: with per-RPC serialization cost modeled, batched
+    replication sustains >= 2x the unbatched ops/sec at loss=0."""
+    s = throughput.batching_speedup("fastraft", burst=64)
+    assert s["speedup"] >= 2.0, s
+
+
+def test_rounds_per_op_amortized_by_batching():
+    """A batch commits in the same number of serial rounds as one entry, so
+    rounds per op divide by the batch size."""
+    single = rounds_to_commit.measure("fastraft", via_leader=False, batch_size=1)
+    batched = rounds_to_commit.measure("fastraft", via_leader=False, batch_size=8)
+    assert batched == pytest.approx(single)  # same rounds per batch
+
+
 def test_throughput_conflict_regime_falls_back_but_commits():
     """Simultaneous proposals from every non-leader deliberately collide on
     slots — the paper's conflict case: the fast track degrades to classic,

@@ -9,6 +9,7 @@ import sys
 import pytest
 
 
+@pytest.mark.slow  # subprocess XLA compiles on a forced 8-device host platform
 def test_collective_consensus_multidevice():
     child = pathlib.Path(__file__).parent / "collective_child.py"
     env = dict(os.environ)

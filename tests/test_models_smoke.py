@@ -9,6 +9,10 @@ import pytest
 from repro.configs import registry
 from repro.models import zoo
 
+# Compiling forward+grad for every arch takes minutes of XLA time; the
+# per-PR CI lane skips these and the full suite on main runs them.
+pytestmark = pytest.mark.slow
+
 ARCHS = registry.list_archs()
 
 

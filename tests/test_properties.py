@@ -10,6 +10,8 @@ plus end-of-run checks: committed-log prefix consistency and exactly-once
 commitment per submitted command.
 """
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.sim import Cluster
@@ -110,6 +112,7 @@ def _run_chaos(protocol: str, n: int, seed: int, loss: float, ops) -> None:
         assert len(log) == len(set(log)), f"{nid} double-committed: {log}"
 
 
+@pytest.mark.slow  # randomized multi-minute chaos schedules
 @settings(max_examples=25, deadline=None, suppress_health_check=list(HealthCheck))
 @given(
     ops=ops_strategy,
@@ -121,6 +124,7 @@ def test_fastraft_chaos_safety(ops, seed, n, loss):
     _run_chaos("fastraft", n, seed, loss, ops)
 
 
+@pytest.mark.slow  # randomized multi-minute chaos schedules
 @settings(max_examples=15, deadline=None, suppress_health_check=list(HealthCheck))
 @given(
     ops=ops_strategy,
@@ -132,6 +136,7 @@ def test_raft_chaos_safety(ops, seed, n, loss):
     _run_chaos("raft", n, seed, loss, ops)
 
 
+@pytest.mark.slow  # randomized chaos schedules
 @settings(max_examples=10, deadline=None, suppress_health_check=list(HealthCheck))
 @given(
     seed=st.integers(0, 2**16),

@@ -138,6 +138,7 @@ def test_controlplane_leases_and_stragglers():
 # ---------------------------------------------------------------- trainer
 
 
+@pytest.mark.slow  # end-to-end Trainer: multi-step XLA compile + train
 def test_trainer_loss_decreases():
     cfg = TrainerConfig(
         arch=registry.get("qwen3-1.7b", reduced=True),
@@ -149,6 +150,7 @@ def test_trainer_loss_decreases():
     assert all(l["committed"] == 1.0 for l in logs)
 
 
+@pytest.mark.slow  # end-to-end Trainer: multi-step XLA compile + train
 def test_trainer_checkpoint_restart_resumes(tmp_path):
     """Train 6 steps w/ ckpt@3, 'crash', build a NEW trainer, resume: the
     resumed run must land on the same final step count and a consistent
@@ -171,6 +173,7 @@ def test_trainer_checkpoint_restart_resumes(tmp_path):
     np.testing.assert_allclose(resumed[-1]["loss"], full[-1]["loss"], rtol=1e-4)
 
 
+@pytest.mark.slow  # end-to-end Trainer: multi-step XLA compile + train
 def test_trainer_consensus_checkpoint_integration(tmp_path):
     cp = ControlPlane(n_nodes=3, seed=9)
     cfg = TrainerConfig(
@@ -185,6 +188,7 @@ def test_trainer_consensus_checkpoint_integration(tmp_path):
     assert any(c.startswith("lease:") for c in cp.applied)
 
 
+@pytest.mark.slow  # end-to-end Trainer: multi-step XLA compile + train
 def test_trainer_classic_track_also_works():
     cfg = TrainerConfig(
         arch=registry.get("qwen3-1.7b", reduced=True),
