@@ -12,25 +12,45 @@ unbatched ops/sec at loss=0.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.raft import RaftConfig
 from repro.core.sim import Cluster
+from repro.core.statemachine import KVMachine
 
 MSG_OVERHEAD = 0.4  # ms per RPC: fixed marshalling/syscall/NIC cost
+KV_KEYS = 32        # live keyspace for workload="kv"
+
+
+def _command(workload: str, b: int, i: int) -> str:
+    if workload == "kv":
+        return f"SET key{(b * 131 + i) % KV_KEYS} val_{b}_{i}"
+    return f"b{b}i{i}"
 
 
 def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
         loss: float = 0.01, proposers: str = "single", batch: bool = False,
-        msg_overhead: float = MSG_OVERHEAD) -> Dict[str, float]:
+        msg_overhead: float = MSG_OVERHEAD,
+        workload: str = "append") -> Dict[str, float]:
     """proposers="single": one non-leader client (largely non-conflicting —
     the regime where the paper's fast track wins). "all": every non-leader
     proposes at the same instant — deliberate slot collisions, measuring the
-    paper's conflict/fallback behavior."""
-    config = RaftConfig(max_batch_entries=max(burst, 1), max_inflight_batches=4)
+    paper's conflict/fallback behavior.
+
+    workload="append" replicates opaque strings (the seed behavior);
+    "kv" drives SET commands over a bounded keyspace through KVMachine
+    state machines with compaction on — the real key-value regime where
+    snapshots stay O(live keys) while throughput numbers stay comparable."""
+    factory: Optional[object] = None
+    snapshot_threshold = 0
+    if workload == "kv":
+        factory = lambda nid: KVMachine()  # noqa: E731
+        snapshot_threshold = 64
+    config = RaftConfig(max_batch_entries=max(burst, 1), max_inflight_batches=4,
+                        snapshot_threshold=snapshot_threshold)
     c = Cluster(n=5, protocol=protocol, seed=seed, loss=loss,
                 base_latency=5.0, jitter=1.0, msg_overhead=msg_overhead,
-                config=config)
+                config=config, state_machine_factory=factory)
     c.run_until_leader(60_000)
     c.run(1000)
     lead = c.leader()
@@ -43,17 +63,19 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
         burst_eids = []
         if batch:
             if proposers == "single":
-                burst_eids += c.submit_batch([f"b{b}i{i}" for i in range(burst)],
-                                             via=others[0])
+                burst_eids += c.submit_batch(
+                    [_command(workload, b, i) for i in range(burst)],
+                    via=others[0])
             else:
                 for k, via in enumerate(others):
-                    cmds = [f"b{b}i{i}" for i in range(burst) if i % len(others) == k]
+                    cmds = [_command(workload, b, i) for i in range(burst)
+                            if i % len(others) == k]
                     if cmds:
                         burst_eids += c.submit_batch(cmds, via=via)
         else:
             for i in range(burst):
                 via = others[0] if proposers == "single" else others[i % len(others)]
-                burst_eids.append(c.submit(f"b{b}i{i}", via=via))
+                burst_eids.append(c.submit(_command(workload, b, i), via=via))
         c.run_until_committed(burst_eids, 120_000)
         eids += burst_eids
     c.check_log_consistency()
@@ -102,6 +124,12 @@ def main() -> List[Dict]:
     r = run("fastraft", 16, proposers="all")
     r.update(protocol="fastraft", burst=16, proposers="all", batch=False)
     rows.append(r)
+    # The key-value regime: KVMachine + compaction, snapshots O(live keys).
+    for batch in (False, True):
+        r = run("fastraft", 16, batch=batch, workload="kv")
+        r.update(protocol="fastraft-kv", burst=16, proposers="single",
+                 batch=batch)
+        rows.append(r)
     print("protocol,proposers,burst,batch,ops_per_sec,fast_share,mean_latency_ms")
     for r in rows:
         print(f"{r['protocol']},{r['proposers']},{r['burst']},{int(r['batch'])},"

@@ -40,7 +40,12 @@ class SnapshotStore:
     cluster as each node's ``snapshot_sink``; ``load`` rebuilds the
     :class:`repro.core.types.Snapshot` for cold-start restores.
 
-    Commands must be JSON-serializable (the simulator uses strings).
+    What persists is the state machine's OPAQUE reduced state plus the
+    client-retry dedup filter (see ``repro.core.statemachine``), not the
+    entry list — a KV snapshot on disk is O(live keys) exactly like it is
+    on the wire. State must be JSON-serializable (the StateMachine
+    contract). Legacy entry-list files load as LogListMachine state, whose
+    wire shape they already match.
     """
 
     def __init__(self, directory: str):
@@ -55,16 +60,8 @@ class SnapshotStore:
             "last_index": snapshot.last_index,
             "last_term": snapshot.last_term,
             "members": list(snapshot.members),
-            "entries": [
-                {
-                    "term": e.term,
-                    "command": e.command,
-                    "origin": e.entry_id.origin,
-                    "seq": e.entry_id.seq,
-                    "proposed_at": e.proposed_at,
-                }
-                for e in snapshot.entries
-            ],
+            "state": snapshot.state,
+            "dedup": snapshot.dedup,
         }
         tmp = self._path(node_id) + ".tmp"
         with open(tmp, "w") as f:
@@ -72,27 +69,32 @@ class SnapshotStore:
         os.replace(tmp, self._path(node_id))
 
     def load(self, node_id: str):
-        from repro.core.types import Entry, EntryId, Snapshot
+        from repro.core.statemachine import DedupTable
+        from repro.core.types import EntryId, Snapshot
 
         path = self._path(node_id)
         if not os.path.exists(path):
             return None
         with open(path) as f:
             payload = json.load(f)
-        entries = tuple(
-            Entry(
-                term=e["term"],
-                command=e["command"],
-                entry_id=EntryId(e["origin"], e["seq"]),
-                proposed_at=e["proposed_at"],
-            )
-            for e in payload["entries"]
-        )
+        # Legacy (pre-state-machine) files carry "entries" — the same wire
+        # shape LogListMachine state uses — and no dedup filter. Rebuild the
+        # filter from the entry ids so client-retry dedup (and the _seq
+        # floor) survives a legacy restore instead of silently vanishing.
+        state = payload.get("state", payload.get("entries"))
+        dedup = payload.get("dedup")
+        if dedup is None and isinstance(state, list):
+            table = DedupTable()
+            for d in state:
+                if isinstance(d, dict) and "origin" in d and "seq" in d:
+                    table.add(EntryId(d["origin"], d["seq"]))
+            dedup = table.state()
         return Snapshot(
             last_index=payload["last_index"],
             last_term=payload["last_term"],
-            entries=entries,
+            state=state,
             members=tuple(payload["members"]),
+            dedup=dedup,
         )
 
     def latest_index(self, node_id: str) -> int:

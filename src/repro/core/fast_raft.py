@@ -332,7 +332,7 @@ class FastRaftNode(RaftNode):
     def _record_fast_vote(
         self, index: int, entry_id: EntryId, voter: NodeId, now: float
     ) -> Outputs:
-        if entry_id in self._entry_index:
+        if self._seen(entry_id):
             return []  # already authoritative (fast-merged or classicized)
         tally = self.tallies.setdefault(index, _SlotTally(first_vote_at=now))
         if tally.resolved:
@@ -357,7 +357,7 @@ class FastRaftNode(RaftNode):
         tally = self.tallies.get(index)
         if tally is not None:
             tally.resolved = True
-        if self.slot(index) is not None or entry.entry_id in self._entry_index:
+        if self.slot(index) is not None or self._seen(entry.entry_id):
             return []  # classic track already owns this index / entry
         # Quorum reached. If not yet contiguous (vote jitter can complete
         # slot k+1 before slot k), HOLD the finalized slot in the overlay;
@@ -420,7 +420,7 @@ class FastRaftNode(RaftNode):
             index = msg.index + off
             if index <= self.snapshot_last_index:
                 continue  # already compacted == committed
-            if self.slot(index) is None and entry.entry_id not in self._entry_index:
+            if self.slot(index) is None and not self._seen(entry.entry_id):
                 # Leader's finalize overrides any conflicting tentative entry.
                 self.fast_slots[index] = Slot(entry.clone(), SlotState.FINALIZED)
         self._merge_finalized(now)
@@ -440,7 +440,7 @@ class FastRaftNode(RaftNode):
                 break
             del self.fast_slots[nxt]
             self._finalized_held.pop(nxt, None)
-            if s.entry.entry_id in self._entry_index:
+            if self._seen(s.entry.entry_id):
                 continue  # already classicized elsewhere in the log
             self._append_slot(s)
             merged_any = True
@@ -472,14 +472,14 @@ class FastRaftNode(RaftNode):
             for index in stuck:
                 s = self.fast_slots.pop(index, None)
                 self._finalized_held.pop(index, None)
-                if s is not None and s.entry.entry_id not in self._entry_index:
+                if s is not None and not self._seen(s.entry.entry_id):
                     self._count("fast_held_reroutes")
                     out += super()._leader_append(s.entry.command,
                                                   s.entry.entry_id, now)
         # Proposer retry: inflight proposals that never committed fall back
         # through the classic forward path.
         for eid, prop in list(self.inflight.items()):
-            if eid in self._entry_index:
+            if self._seen(eid):
                 del self.inflight[eid]
                 continue
             if not prop.fell_back and now - prop.started_at > timeout:
@@ -543,7 +543,7 @@ class FastRaftNode(RaftNode):
         displaced: List[Entry] = []
         for index, eid in must:
             e = entries[eid]
-            if eid in self._entry_index:
+            if self._seen(eid):
                 continue
             if index <= self.snapshot_last_index:
                 # The slot is compacted committed history holding a different
@@ -572,11 +572,11 @@ class FastRaftNode(RaftNode):
 
         out: Outputs = []
         for e in displaced:
-            if e.entry_id not in self._entry_index:
+            if not self._seen(e.entry_id):
                 out += super()._leader_append(e.command, e.entry_id, now)
         if self.readopt_uncommitted:
             for eid in maybe:
-                if eid not in self._entry_index:
+                if not self._seen(eid):
                     e = entries[eid]
                     out += super()._leader_append(e.command, eid, now)
         # The new leader's log is now authoritative; clear the overlay and

@@ -29,9 +29,46 @@ from repro.core.fast_raft import FastRaftNode
 from repro.core.metrics import Recorder
 from repro.core.raft import RaftConfig, RaftNode
 from repro.core.sim import Cluster, LinkModel, Simulation
+from repro.core.statemachine import LogListMachine, StateMachine
 from repro.core.types import Entry, EntryId, Message, NodeId
 
 GLOBAL_SHADOW_PREFIX = "__global__:"
+
+
+class ShadowDeliveryMachine(StateMachine):
+    """Wraps a pod host's state machine and surfaces globally-committed
+    shadow entries to the hierarchy as they apply locally.
+
+    Delivery rides the replicated apply path (not a harness callback): every
+    host's machine observes the shadow entry when the pod's local consensus
+    applies it, and the hierarchy dedups per pod on (index, entry_id) —
+    first local apply wins. A host that catches up via a snapshot jump skips
+    individual applies, which is safe: the snapshotting host already applied
+    (and delivered) those entries, so the pod-level dedup has them."""
+
+    name = "shadow"
+
+    def __init__(self, inner: StateMachine, on_shadow: Callable[[int, Entry], None]):
+        self.inner = inner
+        self.on_shadow = on_shadow
+
+    def apply(self, index: int, entry: Entry) -> Any:
+        cmd = entry.command
+        if isinstance(cmd, str) and cmd.startswith(GLOBAL_SHADOW_PREFIX):
+            self.on_shadow(index, entry)
+        return self.inner.apply(index, entry)
+
+    def snapshot(self) -> Any:
+        return self.inner.snapshot()
+
+    def restore(self, state: Any) -> None:
+        self.inner.restore(state)
+
+    def size_bytes(self) -> int:
+        return self.inner.size_bytes()
+
+    def applied_entries(self):
+        return self.inner.applied_entries()
 
 
 class HierarchicalCluster:
@@ -50,6 +87,7 @@ class HierarchicalCluster:
         tick_interval: float = 10.0,
         config: Optional[RaftConfig] = None,
         global_config: Optional[RaftConfig] = None,
+        state_machine_factory: Optional[Callable[[NodeId], StateMachine]] = None,
     ):
         self.sim = Simulation(seed)
         self.protocol = protocol
@@ -57,10 +95,20 @@ class HierarchicalCluster:
         self.global_link = LinkModel(global_loss, global_latency, jitter)
         self.global_metrics = Recorder()
         self.tick_interval = tick_interval
+        # Per-pod base machine factory (None = LogListMachine); each host's
+        # machine is wrapped in a ShadowDeliveryMachine so globally-committed
+        # entries disseminate through the replicated apply path.
+        self._base_sm_factory = state_machine_factory
+
+        # Delivered global commands per pod (via local shadow entries).
+        self.delivered: Dict[str, List[Any]] = {}
+        self._delivered_keys: Dict[str, set] = {}
 
         # Local tiers: one Cluster per pod, sharing the one simulation.
         self.pods: Dict[str, Cluster] = {}
         for pi, pod in enumerate(self.pod_ids):
+            self.delivered[pod] = []
+            self._delivered_keys[pod] = set()
             self.pods[pod] = Cluster(
                 n=hosts_per_pod,
                 protocol=protocol,
@@ -73,6 +121,7 @@ class HierarchicalCluster:
                 tick_interval=tick_interval,
                 node_prefix=f"{pod}h",
                 sim=self.sim,
+                state_machine_factory=self._pod_sm_factory(pod),
             )
 
         # Global tier: one logical member per pod.
@@ -93,11 +142,6 @@ class HierarchicalCluster:
         for pod, n in self.global_nodes.items():
             n.start(self.sim.now)
             self._schedule_global_tick(pod)
-
-        # Delivered global commands per pod (via local shadow entries).
-        self.delivered: Dict[str, List[Any]] = {p: [] for p in self.pod_ids}
-        for pod in self.pod_ids:
-            self._hook_local_apply(pod)
 
     # --------------------------------------------------------- global plumbing
 
@@ -150,26 +194,27 @@ class HierarchicalCluster:
 
         return on_apply
 
-    def _hook_local_apply(self, pod: str) -> None:
-        local = self.pods[pod]
+    def _pod_sm_factory(self, pod: str) -> Callable[[NodeId], StateMachine]:
+        """Factory wrapping each host's machine with shadow-entry delivery.
+        First local apply wins per (index, entry_id) across the pod."""
 
-        def on_apply(index: int, entry: Entry, _pod=pod) -> None:
-            cmd = entry.command
-            if isinstance(cmd, str) and cmd.startswith(GLOBAL_SHADOW_PREFIX):
-                self.delivered[_pod].append(cmd[len(GLOBAL_SHADOW_PREFIX):])
-
-        # Register on every host (first local apply wins for `delivered`).
-        seen = set()
-
-        def dedup_apply(index: int, entry: Entry, _pod=pod) -> None:
+        def on_shadow(index: int, entry: Entry, _pod=pod) -> None:
             key = (index, str(entry.entry_id))
-            if key in seen:
+            if key in self._delivered_keys[_pod]:
                 return
-            seen.add(key)
-            on_apply(index, entry)
+            self._delivered_keys[_pod].add(key)
+            cmd = entry.command
+            self.delivered[_pod].append(cmd[len(GLOBAL_SHADOW_PREFIX):])
 
-        for node in local.nodes.values():
-            node.apply_fn = dedup_apply
+        def factory(nid: NodeId) -> StateMachine:
+            inner = (
+                self._base_sm_factory(nid)
+                if self._base_sm_factory is not None
+                else LogListMachine()
+            )
+            return ShadowDeliveryMachine(inner, on_shadow)
+
+        return factory
 
     # ------------------------------------------------------------- workload
 

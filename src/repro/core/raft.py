@@ -22,19 +22,22 @@ InstallSnapshot instead of log replay.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import random
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.statemachine import DedupTable, LogListMachine, StateMachine
 from repro.core.types import (
     AppendEntriesArgs,
     AppendEntriesReply,
-    ClientReply,
     Entry,
     EntryId,
     ForwardOperation,
     InstallSnapshotArgs,
+    InstallSnapshotChunk,
+    InstallSnapshotChunkReply,
     InstallSnapshotReply,
     Message,
     NodeId,
@@ -45,6 +48,8 @@ from repro.core.types import (
     SlotState,
     Snapshot,
     majority,
+    snapshot_from_bytes,
+    snapshot_to_bytes,
 )
 
 Outputs = List[Tuple[NodeId, Message]]
@@ -78,6 +83,25 @@ class RaftConfig:
     # from the log. 0 = never compact (seed behavior). Followers whose
     # next_index falls below the snapshot receive InstallSnapshot.
     snapshot_threshold: int = 0
+    # Chunked snapshot transfer: when > 0, InstallSnapshot streams the
+    # serialized snapshot in chunks of this many bytes (at most one chunk in
+    # flight per follower, offset-based resume, retransmit on heartbeat) so
+    # a lossy link resumes a partial transfer instead of restarting it.
+    # 0 = single-message InstallSnapshot (seed behavior).
+    snapshot_chunk_bytes: int = 0
+
+
+@dataclasses.dataclass
+class _SnapshotTransfer:
+    """Leader-side progress of one chunked snapshot transfer to one
+    follower. ``offset`` is the follower-acknowledged cursor: the next chunk
+    always starts there, so a heartbeat retransmission after loss resends
+    the unacked chunk rather than restarting the stream."""
+
+    last_index: int
+    last_term: int
+    data: bytes
+    offset: int = 0
 
 
 class RaftNode:
@@ -90,6 +114,7 @@ class RaftNode:
         config: Optional[RaftConfig] = None,
         seed: int = 0,
         apply_fn: Optional[Callable[[int, Entry], None]] = None,
+        state_machine: Optional[StateMachine] = None,
     ):
         self.id = node_id
         self.members: List[NodeId] = list(members)
@@ -98,6 +123,12 @@ class RaftNode:
         # would silently break cross-process determinism of every sim.
         self.rng = random.Random(zlib.crc32(node_id.encode()) ^ (seed * 2654435761 % 2**32))
         self.apply_fn = apply_fn
+        # The replicated state machine. Committed entries are applied to it
+        # in index order; snapshots carry ITS reduced state, not entries.
+        self.state_machine: StateMachine = state_machine or LogListMachine()
+        # Compact exactly-once filter over applied EntryIds: keeps client
+        # retry dedup exact after the prefix (and its ids) compacts away.
+        self._dedup = DedupTable()
 
         # Persistent state.
         self.term = 0
@@ -121,6 +152,11 @@ class RaftNode:
         # heartbeat broadcast, which doubles as retransmission after loss.
         self._inflight: Dict[NodeId, int] = {}
         self._pipe_next: Dict[NodeId, int] = {}
+        # Chunked snapshot transfers in progress (leader side), per follower.
+        self._snap_xfer: Dict[NodeId, _SnapshotTransfer] = {}
+        # Chunked snapshot being received (follower side):
+        # {"last_index", "last_term", "data": bytearray}.
+        self._incoming_snap: Optional[dict] = None
 
         # Leader-side client-command coalescing (config.batch_window > 0).
         self._batch_buffer: List[Tuple[Any, EntryId]] = []
@@ -172,7 +208,13 @@ class RaftNode:
         if index == 0:
             return 0
         if self.snapshot is not None and index <= self.snapshot.last_index:
-            return self.snapshot.entries[index - 1].term
+            # Interior terms compacted away with the entries (the snapshot
+            # state is opaque). last_term is exact at the boundary; for
+            # interior indexes it is an approximation that is only ever used
+            # as a heartbeat prev_log_term while a snapshot transfer is in
+            # flight — a mismatch there just makes the follower reply false,
+            # and the snapshot installs either way.
+            return self.snapshot.last_term
         return self.log[index - self.snapshot_last_index - 1].entry.term
 
     def slot(self, index: int) -> Optional[Slot]:
@@ -194,6 +236,11 @@ class RaftNode:
     def _persist_hard_state(self) -> None:
         if self.hard_state_sink is not None:
             self.hard_state_sink(self.id, self.term, self.voted_for, self._seq)
+
+    def _seen(self, entry_id: EntryId) -> bool:
+        """Has this EntryId been observed as a live log entry or an applied
+        (possibly compacted) one? The client-retry dedup predicate."""
+        return entry_id in self._entry_index or self._dedup.contains(entry_id)
 
     def _count(self, kind: str, n: int = 1) -> None:
         if self.metrics is not None:
@@ -222,6 +269,7 @@ class RaftNode:
             self._buffered_ids.clear()
         self._inflight = {}
         self._pipe_next = {}
+        self._snap_xfer = {}
         self._reset_election_timer(now)
 
     def _become_candidate(self, now: float) -> Outputs:
@@ -259,6 +307,7 @@ class RaftNode:
         self.match_index = {p: 0 for p in self.peers()}
         self._inflight = {}
         self._pipe_next = {}
+        self._snap_xfer = {}
         self.next_heartbeat = now  # fire immediately
         self._count("leader_elected")
         if self.metrics is not None:
@@ -398,22 +447,7 @@ class RaftNode:
         was compacted away."""
         ni = self.next_index.get(peer, self.last_log_index() + 1)
         if self.snapshot is not None and ni <= self.snapshot.last_index:
-            if self._inflight.get(peer, 0) > 0:
-                return []  # one snapshot in flight at a time
-            self._inflight[peer] = 1
-            self._count("snapshots_sent")
-            return [
-                (
-                    peer,
-                    InstallSnapshotArgs(
-                        term=self.term,
-                        src=self.id,
-                        leader_id=self.id,
-                        snapshot=self.snapshot.clone(),
-                        leader_commit=self.commit_index,
-                    ),
-                )
-            ]
+            return self._send_snapshot(peer)
         out: Outputs = []
         batch = max(1, self.config.max_batch_entries)
         depth = max(1, self.config.max_inflight_batches)
@@ -439,6 +473,66 @@ class RaftNode:
             start += len(entries)
             self._pipe_next[peer] = start
         return out
+
+    def _send_snapshot(self, peer: NodeId) -> Outputs:
+        """Catch a follower up past the compaction horizon: one monolithic
+        InstallSnapshot (snapshot_chunk_bytes == 0) or the next chunk of a
+        streamed transfer. Either way at most one message is in flight; the
+        heartbeat broadcast clears the inflight mark and re-sends, which
+        doubles as retransmission after loss."""
+        if self._inflight.get(peer, 0) > 0:
+            return []  # one snapshot message in flight at a time
+        self._inflight[peer] = 1
+        chunk = self.config.snapshot_chunk_bytes
+        if chunk <= 0:
+            self._count("snapshots_sent")
+            # Pre-warm the size cache on OUR snapshot so every clone sent
+            # (one per retransmission) inherits it instead of re-serializing
+            # the whole state for the link model's size estimate.
+            self.snapshot.size_bytes()
+            return [
+                (
+                    peer,
+                    InstallSnapshotArgs(
+                        term=self.term,
+                        src=self.id,
+                        leader_id=self.id,
+                        snapshot=self.snapshot.clone(),
+                        leader_commit=self.commit_index,
+                    ),
+                )
+            ]
+        xfer = self._snap_xfer.get(peer)
+        if xfer is None or xfer.last_index != self.snapshot.last_index:
+            # New transfer (or the leader compacted again mid-transfer, which
+            # changes the snapshot identity and restarts the stream).
+            xfer = _SnapshotTransfer(
+                last_index=self.snapshot.last_index,
+                last_term=self.snapshot.last_term,
+                data=snapshot_to_bytes(self.snapshot),
+            )
+            self._snap_xfer[peer] = xfer
+            self._count("snapshots_sent")
+        data = xfer.data[xfer.offset : xfer.offset + chunk]
+        done = xfer.offset + len(data) >= len(xfer.data)
+        self._count("snapshot_chunks_sent")
+        return [
+            (
+                peer,
+                InstallSnapshotChunk(
+                    term=self.term,
+                    src=self.id,
+                    leader_id=self.id,
+                    last_index=xfer.last_index,
+                    last_term=xfer.last_term,
+                    offset=xfer.offset,
+                    data=data,
+                    total_bytes=len(xfer.data),
+                    done=done,
+                    leader_commit=self.commit_index,
+                ),
+            )
+        ]
 
     def _handle_AppendEntriesArgs(self, msg: AppendEntriesArgs, now: float) -> Outputs:
         if msg.term < self.term:
@@ -529,7 +623,7 @@ class RaftNode:
         if not self.alive:
             return []
         entry_id = entry_id or EntryId(self.id, self.next_seq())
-        if entry_id in self._entry_index or entry_id in self._buffered_ids:
+        if self._seen(entry_id) or entry_id in self._buffered_ids:
             return []  # duplicate retry
         if self.metrics is not None:
             self.metrics.submitted(entry_id, now, mode=self._submit_mode())
@@ -549,7 +643,7 @@ class RaftNode:
         fresh = [
             (c, e)
             for c, e in pairs
-            if e not in self._entry_index and e not in self._buffered_ids
+            if not self._seen(e) and e not in self._buffered_ids
         ]
         if not fresh:
             return []
@@ -601,7 +695,7 @@ class RaftNode:
         pending, self._pending_client = self._pending_client, []
         out: Outputs = []
         for command, entry_id in pending:
-            if entry_id in self._entry_index:
+            if self._seen(entry_id):
                 continue
             if self.role is Role.LEADER:
                 out += self._leader_append(command, entry_id, now)
@@ -629,7 +723,7 @@ class RaftNode:
         pairs = [
             (c, e)
             for c, e in pairs
-            if e not in self._entry_index and e not in self._buffered_ids
+            if not self._seen(e) and e not in self._buffered_ids
         ]
         if not pairs:
             return []
@@ -654,7 +748,7 @@ class RaftNode:
     ) -> Outputs:
         appended = False
         for command, entry_id in pairs:
-            if entry_id in self._entry_index:
+            if self._seen(entry_id):
                 continue
             e = Entry(term=self.term, command=command, entry_id=entry_id, proposed_at=now)
             self._append_slot(Slot(e, SlotState.CLASSIC))
@@ -714,22 +808,27 @@ class RaftNode:
 
     # ---------------------------------------------------- snapshot/compaction
 
-    def compact(self, upto: Optional[int] = None) -> None:
-        """Fold the applied prefix (up to ``upto``, default everything
-        applied) into ``self.snapshot`` and drop it from the log. Safe at any
-        time: only applied == committed entries are compacted, and followers
-        that still need them are caught up via InstallSnapshot."""
-        upto = self.last_applied if upto is None else min(upto, self.last_applied)
+    def compact(self) -> None:
+        """Fold the whole applied prefix into ``self.snapshot`` — the state
+        machine's reduced state plus the dedup filter — and drop it from the
+        log. Safe at any time: only applied == committed entries are
+        compacted, and followers that still need them are caught up via
+        InstallSnapshot."""
+        upto = self.last_applied
         if upto <= self.snapshot_last_index:
             return
-        old = self.snapshot.entries if self.snapshot is not None else ()
         keep = upto - self.snapshot_last_index
-        entries = tuple(old) + tuple(s.entry for s in self.log[:keep])
+        last_term = self.term_at(upto)
+        for s in self.log[:keep]:
+            # Applied ids live on in the dedup filter; drop the log mapping
+            # so node memory tracks the machine's reduced state, not history.
+            self._entry_index.pop(s.entry.entry_id, None)
         self.snapshot = Snapshot(
             last_index=upto,
-            last_term=entries[-1].term,
-            entries=entries,
+            last_term=last_term,
+            state=self.state_machine.snapshot(),
             members=tuple(self.members),
+            dedup=self._dedup.state(),
         )
         del self.log[:keep]
         self._count("compactions")
@@ -738,24 +837,21 @@ class RaftNode:
 
     def restore_snapshot(self, snap: Snapshot) -> None:
         """Cold-start from a persisted snapshot (fresh host replacing a lost
-        one): the snapshot becomes the whole committed state. Entries are NOT
-        re-applied through apply_fn — the snapshot IS the applied state."""
+        one): the snapshot becomes the whole committed state. The state
+        machine jumps to the snapshot state — nothing is re-applied."""
         self.snapshot = snap.clone()
         self.log = []
-        self._entry_index = {
-            e.entry_id: i + 1 for i, e in enumerate(self.snapshot.entries)
-        }
+        self._entry_index = {}
+        self.state_machine.restore(copy.deepcopy(snap.state))
+        self._dedup = DedupTable.from_state(snap.dedup)
         self.commit_index = snap.last_index
         self.last_applied = snap.last_index
         self.term = max(self.term, snap.last_term)
         self.members = sorted(snap.members)
-        # Floor for seq reuse from the snapshot itself; the authoritative
-        # value comes from restore_hard_state (seqs burned after the last
-        # compaction are not in the snapshot).
-        self._seq = max(
-            [self._seq]
-            + [e.entry_id.seq for e in snap.entries if e.entry_id.origin == self.id]
-        )
+        # Floor for seq reuse from the snapshot's dedup filter; the
+        # authoritative value comes from restore_hard_state (seqs burned
+        # after the last compaction are not in the snapshot).
+        self._seq = max(self._seq, self._dedup.max_seq(self.id))
 
     def restore_hard_state(
         self, term: int, voted_for: Optional[NodeId], seq: int
@@ -771,18 +867,16 @@ class RaftNode:
     def _install_snapshot(self, snap: Snapshot, now: float) -> None:
         """Follower-side InstallSnapshot: adopt the leader's compacted prefix.
 
-        Entries above our last_applied are applied through the normal apply
-        path (so state machines and metrics observe them exactly once); any
-        log suffix beyond the snapshot that matches last_term is retained.
+        If the snapshot is ahead of our applied state, the state machine
+        JUMPS to the snapshot state (reduced state replaces replay — the
+        whole point of state-machine snapshots); any log suffix beyond the
+        snapshot that matches last_term is retained.
         """
         if snap.last_index <= self.snapshot_last_index:
             return
-        # Apply the part of the snapshot we had not applied yet.
-        while self.last_applied < snap.last_index:
-            self.last_applied += 1
-            self._apply(self.last_applied, snap.entries[self.last_applied - 1], now)
-        self.commit_index = max(self.commit_index, snap.last_index)
-        # Retain a matching live suffix; drop everything else.
+        # Retain a matching live suffix; drop everything else. (If we had
+        # applied past snap.last_index, those entries are committed, so our
+        # term at snap.last_index necessarily matches and the suffix stays.)
         suffix: List[Slot] = []
         if self.last_log_index() > snap.last_index and self.term_at(
             snap.last_index
@@ -790,13 +884,17 @@ class RaftNode:
             lo = snap.last_index - self.snapshot_last_index
             if lo >= 0:
                 suffix = self.log[lo:]
+        if snap.last_index > self.last_applied:
+            self.state_machine.restore(copy.deepcopy(snap.state))
+            self._dedup = DedupTable.from_state(snap.dedup)
+            self.last_applied = snap.last_index
+        self.commit_index = max(self.commit_index, snap.last_index)
         self.snapshot = snap.clone()
         self.log = suffix
         self._entry_index = {
-            e.entry_id: i + 1 for i, e in enumerate(self.snapshot.entries)
+            s.entry.entry_id: snap.last_index + p + 1
+            for p, s in enumerate(self.log)
         }
-        for p, s in enumerate(self.log):
-            self._entry_index[s.entry.entry_id] = snap.last_index + p + 1
         self.members = sorted(snap.members)
         self._count("snapshots_installed")
 
@@ -827,18 +925,153 @@ class RaftNode:
         self._inflight[msg.src] = 0
         if msg.match_index <= 0:
             return []
-        self.match_index[msg.src] = max(self.match_index.get(msg.src, 0), msg.match_index)
-        self.next_index[msg.src] = self.match_index[msg.src] + 1
-        self._pipe_next[msg.src] = self.next_index[msg.src]
+        return self._snapshot_delivered(msg.src, msg.match_index, now)
+
+    def _snapshot_delivered(self, peer: NodeId, match_index: int, now: float) -> Outputs:
+        """Leader bookkeeping once a follower holds the snapshot: resume
+        normal AppendEntries pipelining right above it.
+
+        The reply's match_index OVERWRITES (not maxes) our record: a host
+        replaced from its checkpoint volume legitimately regresses below the
+        match its lost incarnation reached, and keeping the stale (higher)
+        match would pin next_index above entries the replacement does not
+        have — an AppendEntries-reject / InstallSnapshot livelock whenever
+        our own snapshot horizon sits below the stale match. The converse
+        hazard (a jitter-delayed old reply briefly regressing a healthy
+        follower's match) self-heals in one round: the follower's next
+        AppendEntries/chunk reply reports its true position — chunk
+        requests at or below its commit short-circuit with
+        match_index=commit_index — so at most one redundant message is
+        sent, which is the right trade against a permanent livelock."""
+        self._snap_xfer.pop(peer, None)
+        self.match_index[peer] = match_index
+        self.next_index[peer] = self.match_index[peer] + 1
+        self._pipe_next[peer] = self.next_index[peer]
         out = self._leader_advance_commit(now)
-        more = self._replicate_to_peer(msg.src)
+        more = self._replicate_to_peer(peer)
         self._count("msgs_out", len(more))
         return out + more
+
+    # ------------------------------------------------- chunked transfer
+
+    def _handle_InstallSnapshotChunk(self, msg: InstallSnapshotChunk, now: float) -> Outputs:
+        if msg.term < self.term:
+            return [
+                (
+                    msg.src,
+                    InstallSnapshotChunkReply(
+                        term=self.term, src=self.id, last_index=msg.last_index
+                    ),
+                )
+            ]
+        self.leader_id = msg.leader_id
+        if self.role is not Role.FOLLOWER:
+            self._become_follower(msg.term, now)
+        self._reset_election_timer(now)
+        if msg.last_index <= self.commit_index:
+            # Already caught up past this snapshot (e.g. a duplicate final
+            # chunk after install): tell the leader where to resume.
+            return [
+                (
+                    msg.src,
+                    InstallSnapshotChunkReply(
+                        term=self.term,
+                        src=self.id,
+                        last_index=msg.last_index,
+                        match_index=self.commit_index,
+                    ),
+                )
+            ]
+        buf = self._incoming_snap
+        if buf is None or buf["last_index"] != msg.last_index:
+            if buf is not None:
+                # A different snapshot supersedes the partial transfer (the
+                # leader compacted again, or a new leader took over with a
+                # different horizon). Plain loss never lands here: retries
+                # carry the same identity and resume at our cursor.
+                self._count("snapshot_transfer_restarts")
+            buf = {
+                "last_index": msg.last_index,
+                "last_term": msg.last_term,
+                "data": bytearray(),
+            }
+            self._incoming_snap = buf
+        cursor = len(buf["data"])
+        if msg.offset == cursor and msg.data:
+            buf["data"] += msg.data
+            cursor = len(buf["data"])
+        elif msg.offset < cursor:
+            self._count("snapshot_chunk_dups")  # retransmit of acked bytes
+        # msg.offset > cursor: a gap (we lost our buffer, e.g. restart
+        # mid-transfer); replying with our cursor rewinds the leader.
+        if msg.done and cursor >= msg.total_bytes:
+            snap = snapshot_from_bytes(bytes(buf["data"]))
+            self._incoming_snap = None
+            if snap.last_index > self.commit_index:
+                self._install_snapshot(snap, now)
+            if msg.leader_commit > self.commit_index:
+                self._advance_commit(
+                    min(msg.leader_commit, self._durable_prefix()), now
+                )
+            return [
+                (
+                    msg.src,
+                    InstallSnapshotChunkReply(
+                        term=self.term,
+                        src=self.id,
+                        last_index=msg.last_index,
+                        next_offset=cursor,
+                        match_index=max(snap.last_index, self.commit_index),
+                    ),
+                )
+            ]
+        return [
+            (
+                msg.src,
+                InstallSnapshotChunkReply(
+                    term=self.term,
+                    src=self.id,
+                    last_index=msg.last_index,
+                    next_offset=cursor,
+                ),
+            )
+        ]
+
+    def _handle_InstallSnapshotChunkReply(
+        self, msg: InstallSnapshotChunkReply, now: float
+    ) -> Outputs:
+        if self.role is not Role.LEADER or msg.term < self.term:
+            return []
+        self._inflight[msg.src] = 0
+        if msg.match_index > 0:
+            return self._snapshot_delivered(msg.src, msg.match_index, now)
+        xfer = self._snap_xfer.get(msg.src)
+        if xfer is None or xfer.last_index != msg.last_index:
+            # Stale reply for a superseded transfer; the next
+            # _replicate_to_peer (below or at the heartbeat) restarts it.
+            more = self._replicate_to_peer(msg.src)
+            self._count("msgs_out", len(more))
+            return more
+        if msg.next_offset == xfer.offset:
+            # Duplicate ack of the position we are already at (a heartbeat
+            # retransmission produced a second reply, or our chunk is still
+            # in flight). Reacting would fork a parallel chunk stream —
+            # the heartbeat covers the genuinely-lost-chunk case.
+            return []
+        # The follower's cursor is authoritative: normally it advances past
+        # the chunk we sent; after a follower restart it legitimately
+        # rewinds to 0. Either way the transfer RESUMES there.
+        xfer.offset = max(0, min(msg.next_offset, len(xfer.data)))
+        more = self._replicate_to_peer(msg.src)
+        self._count("msgs_out", len(more))
+        return more
 
     def _apply(self, index: int, entry: Entry, now: float) -> None:
         cmd = entry.command
         if isinstance(cmd, str) and cmd.startswith(CONFIG_PREFIX):
             self._apply_config(cmd)
+        self._dedup.add(entry.entry_id)
+        self.state_machine.apply(index, entry)
         if self.metrics is not None:
             self.metrics.committed(self.id, index, entry, now)
         if self.apply_fn is not None:
@@ -863,15 +1096,43 @@ class RaftNode:
     # --------------------------------------------------------------- debug
 
     def committed_entries(self) -> List[Entry]:
-        """All committed entries in index order (snapshot prefix + live log
-        up to commit_index)."""
-        out = list(self.snapshot.entries) if self.snapshot is not None else []
-        for p in range(self.commit_index - self.snapshot_last_index):
-            out.append(self.log[p].entry)
+        """All committed entries this node can enumerate, in index order.
+
+        With the default LogListMachine the machine retains the full applied
+        history, so this is the complete committed sequence exactly as in
+        the seed. Reduced-state machines (KV) cannot enumerate the compacted
+        prefix; only the applied-through-live-log tail is returned (use the
+        machine's own state for cross-node divergence checks)."""
+        out = self.state_machine.applied_entries()
+        if out is None:
+            out = []
+            base = self.last_applied - self.snapshot_last_index
+            for p in range(max(0, base)):
+                out.append(self.log[p].entry)
+            return out
+        # The machine's history covers 1..last_applied; last_applied tracks
+        # commit_index everywhere in this codebase (commit applies eagerly).
         return out
 
     def committed_commands(self) -> List[Any]:
         return [e.command for e in self.committed_entries()]
+
+    def committed_by_index(self) -> Dict[int, Entry]:
+        """Enumerable committed entries keyed by ABSOLUTE log index.
+
+        The single source of truth for cross-node agreement checks: a
+        reduced-state machine's history is a tail starting above its own
+        compaction horizon, so comparisons must align on absolute index
+        (the enumerable range always ends at last_applied)."""
+        hist = self.committed_entries()
+        start = self.last_applied - len(hist) + 1
+        return {start + i: e for i, e in enumerate(hist)}
+
+    def has_applied(self, entry_id: EntryId) -> bool:
+        """Exact membership oracle over this node's applied (= committed)
+        entries, valid across compaction for ANY state machine — the dedup
+        filter carries it even when entries can no longer be enumerated."""
+        return self._dedup.contains(entry_id)
 
     def log_summary(self) -> List[Tuple[int, str, str]]:
         return [
@@ -883,8 +1144,10 @@ class RaftNode:
 
     def restart(self, now: float) -> None:
         """Crash-recovery: persistent state (term, voted_for, log, snapshot)
-        survives; volatile state resets. Commit/apply resume from the
-        snapshot — its prefix is already durable applied state."""
+        survives; volatile state resets. The state machine rolls back to the
+        last snapshot (or empty) and the suffix re-applies as commit
+        re-advances — exactly the snapshot-plus-replay recovery a durable
+        deployment performs."""
         self.alive = True
         self.role = Role.FOLLOWER
         self.leader_id = None
@@ -893,8 +1156,16 @@ class RaftNode:
         self.match_index = {}
         self._inflight = {}
         self._pipe_next = {}
+        self._snap_xfer = {}
+        self._incoming_snap = None
         self._batch_buffer = []
         self._buffered_ids = set()
+        if self.snapshot is not None:
+            self.state_machine.restore(copy.deepcopy(self.snapshot.state))
+            self._dedup = DedupTable.from_state(self.snapshot.dedup)
+        else:
+            self.state_machine.restore(None)
+            self._dedup = DedupTable()
         self.commit_index = self.snapshot_last_index
         self.last_applied = self.snapshot_last_index
         self._reset_election_timer(now)

@@ -18,13 +18,64 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import random
+import zlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 from repro.core.metrics import Recorder
 from repro.core.raft import RaftConfig, RaftNode
 from repro.core.fast_raft import FastRaftNode
-from repro.core.types import EntryId, Message, NodeId
+from repro.core.statemachine import StateMachine
+from repro.core.types import (
+    AppendEntriesArgs,
+    EntryId,
+    FastFinalize,
+    FastPropose,
+    ForwardOperation,
+    InstallSnapshotArgs,
+    InstallSnapshotChunk,
+    Message,
+    NodeId,
+)
+
+# Rough fixed per-message framing cost (headers, term/id fields) for the
+# size-aware network model; only relative sizes matter.
+_MSG_BASE_BYTES = 64
+_ENTRY_BASE_BYTES = 24
+
+
+def _entry_bytes(entry) -> int:
+    return _ENTRY_BASE_BYTES + len(str(entry.command))
+
+
+def wire_size(msg: Message) -> int:
+    """Approximate serialized size of a message in bytes.
+
+    Drives the size-aware pieces of :class:`LinkModel` (``bytes_per_ms``
+    transmission time and ``mtu_bytes`` per-packet loss). Entry-bearing
+    messages scale with their payload; a monolithic InstallSnapshot pays for
+    the whole serialized snapshot, a chunk only for its slice."""
+    if isinstance(msg, AppendEntriesArgs):
+        return _MSG_BASE_BYTES + sum(_entry_bytes(s.entry) for s in msg.entries)
+    if isinstance(msg, InstallSnapshotChunk):
+        return _MSG_BASE_BYTES + len(msg.data)
+    if isinstance(msg, InstallSnapshotArgs):
+        size = msg.snapshot.size_bytes() if msg.snapshot is not None else 0
+        return _MSG_BASE_BYTES + size
+    if isinstance(msg, (FastPropose, FastFinalize)):
+        entries = list(msg.window) or ([msg.entry] if msg.entry else [])
+        return _MSG_BASE_BYTES + sum(_entry_bytes(e) for e in entries)
+    if isinstance(msg, ForwardOperation):
+        n = _entry_bytes_cmd(msg.command) + sum(
+            _entry_bytes_cmd(c) for c, _ in msg.batch
+        )
+        return _MSG_BASE_BYTES + n
+    return _MSG_BASE_BYTES
+
+
+def _entry_bytes_cmd(command) -> int:
+    return _ENTRY_BASE_BYTES + len(str(command))
 
 
 class Simulation:
@@ -55,23 +106,52 @@ class Simulation:
 
 class LinkModel:
     """Directed-link model: drop probability, propagation delay, and an
-    optional per-message serialization cost.
+    optional SIZE-AWARE serialization/loss model.
 
     ``msg_overhead`` models the fixed per-RPC cost (syscall, marshalling,
     NIC serialization): each message occupies the link for that long before
     the next one may start, so N unbatched RPCs queue behind each other
-    while one N-entry batch pays the cost once. 0.0 (default) reproduces the
-    seed's pure-latency network exactly."""
+    while one N-entry batch pays the cost once.
+
+    ``bytes_per_ms`` adds transmission time proportional to
+    :func:`wire_size` (link bandwidth): big messages — a monolithic
+    InstallSnapshot above all — occupy the link longer than small ones.
+
+    ``mtu_bytes`` makes LOSS size-aware: a message of S bytes is ceil(S/mtu)
+    packets, and it is delivered only if every packet survives, i.e. it
+    drops with probability 1-(1-loss)^packets. This is the regime where
+    chunked snapshot transfer beats monolithic: one huge message virtually
+    never survives a lossy link, while chunks sized near the MTU do.
+
+    All three default to 0.0, which reproduces the seed's pure-latency,
+    per-message-loss network exactly."""
 
     def __init__(self, loss: float = 0.0, base_latency: float = 5.0, jitter: float = 0.0,
-                 msg_overhead: float = 0.0):
+                 msg_overhead: float = 0.0, bytes_per_ms: float = 0.0,
+                 mtu_bytes: float = 0.0):
         self.loss = loss
         self.base_latency = base_latency
         self.jitter = jitter
         self.msg_overhead = msg_overhead
+        self.bytes_per_ms = bytes_per_ms
+        self.mtu_bytes = mtu_bytes
 
     def sample_latency(self, rng: random.Random) -> float:
         return self.base_latency + (rng.uniform(0.0, self.jitter) if self.jitter else 0.0)
+
+    def drop_probability(self, size: int) -> float:
+        if self.loss <= 0:
+            return 0.0
+        if self.mtu_bytes > 0:
+            packets = max(1, math.ceil(size / self.mtu_bytes))
+            return 1.0 - (1.0 - self.loss) ** packets
+        return self.loss
+
+    def serialization_cost(self, size: int) -> float:
+        cost = self.msg_overhead
+        if self.bytes_per_ms > 0:
+            cost += size / self.bytes_per_ms
+        return cost
 
 
 class Cluster:
@@ -89,14 +169,18 @@ class Cluster:
         base_latency: float = 5.0,
         jitter: float = 0.0,
         msg_overhead: float = 0.0,
+        bytes_per_ms: float = 0.0,
+        mtu_bytes: float = 0.0,
         config: Optional[RaftConfig] = None,
         tick_interval: float = 10.0,
         node_prefix: str = "n",
         sim: Optional[Simulation] = None,
         snapshot_store=None,
+        state_machine_factory: Optional[Callable[[NodeId], StateMachine]] = None,
     ):
         self.sim = sim or Simulation(seed)
-        self.link = LinkModel(loss, base_latency, jitter, msg_overhead)
+        self.link = LinkModel(loss, base_latency, jitter, msg_overhead,
+                              bytes_per_ms, mtu_bytes)
         self.link_overrides: Dict[Tuple[NodeId, NodeId], LinkModel] = {}
         self._link_busy: Dict[Tuple[NodeId, NodeId], float] = {}
         self.blocked: set = set()  # directed (src, dst) pairs
@@ -104,23 +188,41 @@ class Cluster:
         self.tick_interval = tick_interval
         self.config = config or RaftConfig()
         self.protocol = protocol
+        self.seed = seed
         # Optional checkpoint.SnapshotStore: compaction snapshots persist
         # through it and restart_from_store() restores a node from disk.
         self.snapshot_store = snapshot_store
+        # Pluggable state machine: one fresh instance per node (None =
+        # LogListMachine, the seed-identical default).
+        self.state_machine_factory = state_machine_factory
+        self._replacements: Dict[NodeId, int] = {}
 
-        cls: Type[RaftNode] = FastRaftNode if protocol == "fastraft" else RaftNode
         ids = [f"{node_prefix}{i}" for i in range(n)]
         self.nodes: Dict[NodeId, RaftNode] = {}
         for i, nid in enumerate(ids):
-            node = cls(nid, ids, config=RaftConfig(**vars(self.config)), seed=seed * 1000 + i)
-            node.metrics = self.metrics
-            if self.snapshot_store is not None:
-                node.snapshot_sink = self.snapshot_store.save
-                node.hard_state_sink = self.snapshot_store.save_hard_state
-            self.nodes[nid] = node
+            self.nodes[nid] = self._make_node(nid, ids, seed * 1000 + i)
         for node in self.nodes.values():
             node.start(self.sim.now)
             self._schedule_tick(node.id)
+
+    def _make_node(self, nid: NodeId, members, seed: int) -> RaftNode:
+        """Construct a node wired exactly like the initial fleet: metrics,
+        a fresh state machine from the factory, and — when a snapshot store
+        is configured — the persistence sinks (joiners and replacements must
+        persist too, not only the founding nodes)."""
+        cls: Type[RaftNode] = FastRaftNode if self.protocol == "fastraft" else RaftNode
+        sm = (
+            self.state_machine_factory(nid)
+            if self.state_machine_factory is not None
+            else None
+        )
+        node = cls(nid, list(members), config=RaftConfig(**vars(self.config)),
+                   seed=seed, state_machine=sm)
+        node.metrics = self.metrics
+        if self.snapshot_store is not None:
+            node.snapshot_sink = self.snapshot_store.save
+            node.hard_state_sink = self.snapshot_store.save_hard_state
+        return node
 
     # ------------------------------------------------------------ plumbing
 
@@ -147,18 +249,23 @@ class Cluster:
         if dst not in self.nodes:
             return
         link = self._link_for(src, dst)
-        if link.loss > 0 and self.sim.rng.random() < link.loss:
+        size_aware = link.bytes_per_ms > 0 or link.mtu_bytes > 0
+        size = wire_size(msg) if size_aware else 0
+        if link.loss > 0 and self.sim.rng.random() < link.drop_probability(size):
             self.metrics.count("dropped")
             return
         delay = link.sample_latency(self.sim.rng)
-        if link.msg_overhead > 0:
-            # Per-RPC serialization: messages queue on the directed link, so
+        overhead = link.serialization_cost(size)
+        if overhead > 0:
+            # Per-RPC serialization (+ size-proportional transmission when
+            # bytes_per_ms is set): messages queue on the directed link, so
             # a burst of unbatched sends pays the overhead N times while a
-            # batch pays it once. (Skipped entirely at 0 so default-config
+            # batch pays it once, and a fat message blocks the link longer
+            # than a lean one. (Skipped entirely at 0 so default-config
             # schedules are bit-identical to the seed's.)
             start = max(self.sim.now, self._link_busy.get((src, dst), 0.0))
-            self._link_busy[(src, dst)] = start + link.msg_overhead
-            delay += (start + link.msg_overhead) - self.sim.now
+            self._link_busy[(src, dst)] = start + overhead
+            delay += (start + overhead) - self.sim.now
 
         def deliver():
             node = self.nodes.get(dst)
@@ -214,17 +321,26 @@ class Cluster:
     def restart(self, nid: NodeId) -> None:
         self.nodes[nid].restart(self.sim.now)
 
-    def restart_from_store(self, nid: NodeId, seed: int = 4242) -> None:
+    def restart_from_store(self, nid: NodeId, seed: Optional[int] = None) -> None:
         """Replace a node with a FRESH instance restored only from the
         persisted snapshot store (models losing the host's disk except the
-        checkpoint volume). Requires a snapshot_store."""
+        checkpoint volume). Requires a snapshot_store.
+
+        The replacement's seed is derived per (node, replacement count) so
+        simultaneous host replacements never share an RNG stream — two
+        replaced nodes with identical election timeouts can livelock an
+        election indefinitely. Pass ``seed`` to override (reproduce a
+        specific schedule)."""
         assert self.snapshot_store is not None, "no snapshot store configured"
         old = self.nodes[nid]
-        cls: Type[RaftNode] = FastRaftNode if self.protocol == "fastraft" else RaftNode
-        node = cls(nid, old.members, config=RaftConfig(**vars(self.config)), seed=seed)
-        node.metrics = self.metrics
-        node.snapshot_sink = self.snapshot_store.save
-        node.hard_state_sink = self.snapshot_store.save_hard_state
+        if seed is None:
+            self._replacements[nid] = self._replacements.get(nid, 0) + 1
+            seed = (
+                self.seed * 1000003
+                + zlib.crc32(nid.encode()) * 31
+                + self._replacements[nid]
+            ) % 2**31
+        node = self._make_node(nid, old.members, seed)
         snap = self.snapshot_store.load(nid)
         if snap is not None:
             node.restore_snapshot(snap)
@@ -276,14 +392,26 @@ class Cluster:
         return {nid: n.committed_commands() for nid, n in self.nodes.items()}
 
     def check_log_consistency(self) -> None:
-        """Safety invariant: all committed logs are prefix-compatible."""
-        logs = list(self.committed_logs().values())
-        for i in range(len(logs)):
-            for j in range(i + 1, len(logs)):
-                a, b = logs[i], logs[j]
-                k = min(len(a), len(b))
-                assert a[:k] == b[:k], (
-                    f"committed log divergence:\n  {logs[i][:k]}\n  {logs[j][:k]}"
+        """Safety invariant: committed commands agree at every absolute
+        index two nodes can both enumerate. Reduced-state machines (KV)
+        only enumerate the tail above their own compaction horizon, and
+        horizons differ per node — so alignment is by absolute index, not
+        list position. (With the default LogListMachine every history
+        starts at index 1 and this is the classic prefix check.)"""
+        indexed = {
+            nid: {x: e.command for x, e in node.committed_by_index().items()}
+            for nid, node in self.nodes.items()
+        }
+        items = list(indexed.items())
+        for i in range(len(items)):
+            for j in range(i + 1, len(items)):
+                (na, a), (nb, b) = items[i], items[j]
+                common = sorted(set(a) & set(b))
+                got_a = [a[x] for x in common]
+                got_b = [b[x] for x in common]
+                assert got_a == got_b, (
+                    f"committed log divergence between {na} and {nb}:\n"
+                    f"  {got_a}\n  {got_b}"
                 )
 
     def check_applied_order(self) -> None:
@@ -298,13 +426,14 @@ class Cluster:
 
     def add_node(self, nid: NodeId, seed: int = 9999) -> None:
         """Bring up a fresh node and commit a membership change through the
-        current leader (single-server change)."""
+        current leader (single-server change). The joiner is wired exactly
+        like founding nodes — including the snapshot/hard-state persistence
+        sinks when a store is configured, so it does not silently stop
+        persisting."""
         lead = self.leader()
         assert lead is not None, "need a leader to change membership"
         members = sorted(set(self.nodes[lead].members) | {nid})
-        cls = FastRaftNode if self.protocol == "fastraft" else RaftNode
-        node = cls(nid, members, config=RaftConfig(**vars(self.config)), seed=seed)
-        node.metrics = self.metrics
+        node = self._make_node(nid, members, seed)
         node.start(self.sim.now)
         self.nodes[nid] = node
         self._schedule_tick(nid)

@@ -16,10 +16,12 @@ Raft description (Castiglia, Goldberg & Patterson, 2020; SebaRaj & Melnychuk,
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import enum
+import json
 import math
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 NodeId = str
 
@@ -99,30 +101,114 @@ class Slot:
         return Slot(self.entry.clone(), self.state)
 
 
+def entry_to_wire(e: Entry) -> Dict[str, Any]:
+    """JSON-serializable form of an Entry (LogList snapshot state and the
+    SnapshotStore both use this shape)."""
+    return {
+        "term": e.term,
+        "command": e.command,
+        "origin": e.entry_id.origin,
+        "seq": e.entry_id.seq,
+        "proposed_at": e.proposed_at,
+    }
+
+
+def entry_from_wire(d: Dict[str, Any]) -> Entry:
+    return Entry(
+        term=d["term"],
+        command=d["command"],
+        entry_id=EntryId(d["origin"], d["seq"]),
+        proposed_at=d.get("proposed_at", 0.0),
+    )
+
+
 @dataclasses.dataclass
 class Snapshot:
     """A compacted committed prefix of the log (indexes 1..last_index).
 
-    The simulator's state machine is the applied command sequence, so the
-    snapshot carries the full committed entries: installing a snapshot
-    re-applies them through ``apply_fn`` on nodes that had not applied them
-    yet, and the carried ``entry_id``s keep client-retry dedup exact across
-    compaction. ``members`` is the cluster config as of ``last_index`` so a
-    follower restored from scratch learns membership too.
+    ``state`` is the OPAQUE reduced state produced by the node's
+    :class:`repro.core.statemachine.StateMachine` — the consensus layer
+    never interprets it, it only ships and persists it. ``dedup`` is the
+    compact client-retry filter (:class:`repro.core.statemachine.
+    DedupTable` state) that keeps EntryId dedup exact across compaction now
+    that entries no longer ride in the snapshot. ``members`` is the cluster
+    config as of ``last_index`` so a follower restored from scratch learns
+    membership too. Both ``state`` and ``dedup`` must be JSON-serializable
+    (:func:`snapshot_to_bytes` is the wire/persistence format).
     """
 
     last_index: int
     last_term: int
-    entries: Tuple[Entry, ...]
-    members: Tuple[NodeId, ...]
+    state: Any = None
+    members: Tuple[NodeId, ...] = ()
+    dedup: Any = None
+
+    @property
+    def entries(self) -> Tuple[Entry, ...]:
+        """Compatibility view: decode ``state`` as an applied entry list
+        when it has the LogListMachine shape (the default machine), else
+        an empty tuple (reduced-state machines don't carry entries)."""
+        if not isinstance(self.state, (list, tuple)):
+            return ()
+        out = []
+        for d in self.state:
+            if not (isinstance(d, dict) and "command" in d and "origin" in d):
+                return ()
+            out.append(entry_from_wire(d))
+        return tuple(out)
+
+    def size_bytes(self) -> int:
+        # Cached: state is immutable once the snapshot is taken (the
+        # StateMachine contract), and the monolithic InstallSnapshot path
+        # would otherwise re-serialize the whole state on every heartbeat
+        # retransmission just to estimate the message size.
+        size = getattr(self, "_wire_bytes", None)
+        if size is None:
+            size = len(snapshot_to_bytes(self))
+            self._wire_bytes = size
+        return size
 
     def clone(self) -> "Snapshot":
-        return Snapshot(
+        snap = Snapshot(
             self.last_index,
             self.last_term,
-            tuple(e.clone() for e in self.entries),
+            copy.deepcopy(self.state),
             tuple(self.members),
+            copy.deepcopy(self.dedup),
         )
+        size = getattr(self, "_wire_bytes", None)
+        if size is not None:
+            snap._wire_bytes = size
+        return snap
+
+
+def snapshot_to_bytes(snap: Snapshot) -> bytes:
+    """Canonical serialized form of a snapshot — the unit the chunked
+    InstallSnapshot protocol streams and the SnapshotStore persists.
+    ``sort_keys`` makes the byte stream identical across leaders holding
+    the same (deterministic) applied state, so a transfer can survive a
+    leader change without splicing mismatched bytes."""
+    return json.dumps(
+        {
+            "last_index": snap.last_index,
+            "last_term": snap.last_term,
+            "members": list(snap.members),
+            "state": snap.state,
+            "dedup": snap.dedup,
+        },
+        sort_keys=True,
+    ).encode("utf-8")
+
+
+def snapshot_from_bytes(data: bytes) -> Snapshot:
+    payload = json.loads(data.decode("utf-8"))
+    return Snapshot(
+        last_index=payload["last_index"],
+        last_term=payload["last_term"],
+        state=payload["state"],
+        members=tuple(payload["members"]),
+        dedup=payload.get("dedup"),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -182,6 +268,38 @@ class InstallSnapshotArgs(Message):
 class InstallSnapshotReply(Message):
     # match_index == snapshot.last_index on success; the leader resumes
     # normal AppendEntries pipelining from there.
+    match_index: int = 0
+
+
+@dataclasses.dataclass
+class InstallSnapshotChunk(Message):
+    """One chunk of a serialized snapshot (``RaftConfig.snapshot_chunk_bytes``
+    > 0). The snapshot identity is (last_index, last_term): a chunk for a
+    different identity than the receiver's in-progress transfer restarts the
+    transfer (the leader compacted again); same identity + ``offset`` equal
+    to the receiver's write cursor extends it. At most one chunk is in
+    flight per follower; each heartbeat retransmits the unacked chunk."""
+
+    leader_id: NodeId = ""
+    last_index: int = 0
+    last_term: int = 0
+    offset: int = 0
+    data: bytes = b""
+    total_bytes: int = 0
+    done: bool = False
+    leader_commit: int = 0
+
+
+@dataclasses.dataclass
+class InstallSnapshotChunkReply(Message):
+    """``next_offset`` is the follower's authoritative write cursor — the
+    resume point. The leader adopts it verbatim (a follower that crashed
+    mid-transfer legitimately rewinds to 0). ``match_index`` > 0 once the
+    snapshot is fully installed; the leader then resumes AppendEntries
+    pipelining above it, exactly like the monolithic reply."""
+
+    last_index: int = 0
+    next_offset: int = 0
     match_index: int = 0
 
 
