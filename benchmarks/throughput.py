@@ -12,6 +12,9 @@ unbatched ops/sec at loss=0.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 from typing import Dict, List, Optional
 
 from repro.core.raft import RaftConfig
@@ -31,7 +34,8 @@ def _command(workload: str, b: int, i: int) -> str:
 def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
         loss: float = 0.01, proposers: str = "single", batch: bool = False,
         msg_overhead: float = MSG_OVERHEAD,
-        workload: str = "append") -> Dict[str, float]:
+        workload: str = "append", read_ratio: float = 0.0,
+        lease: bool = False) -> Dict[str, float]:
     """proposers="single": one non-leader client (largely non-conflicting —
     the regime where the paper's fast track wins). "all": every non-leader
     proposes at the same instant — deliberate slot collisions, measuring the
@@ -40,14 +44,22 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
     workload="append" replicates opaque strings (the seed behavior);
     "kv" drives SET commands over a bounded keyspace through KVMachine
     state machines with compaction on — the real key-value regime where
-    snapshots stay O(live keys) while throughput numbers stay comparable."""
+    snapshots stay O(live keys) while throughput numbers stay comparable.
+
+    read_ratio > 0 (kv workload only) turns that fraction of each burst
+    into linearizable GETs on the read path (``Cluster.read``: ReadIndex,
+    or zero-round leases with ``lease=True``) — reads stop consuming log
+    slots and replication bandwidth, which is exactly what the read
+    subsystem buys over GET-as-log-entry."""
     factory: Optional[object] = None
     snapshot_threshold = 0
     if workload == "kv":
         factory = lambda nid: KVMachine()  # noqa: E731
         snapshot_threshold = 64
+    assert read_ratio == 0.0 or workload == "kv", "read_ratio needs --workload kv"
     config = RaftConfig(max_batch_entries=max(burst, 1), max_inflight_batches=4,
-                        snapshot_threshold=snapshot_threshold)
+                        snapshot_threshold=snapshot_threshold,
+                        lease_duration_ms=10_000.0 if lease else 0.0)
     c = Cluster(n=5, protocol=protocol, seed=seed, loss=loss,
                 base_latency=5.0, jitter=1.0, msg_overhead=msg_overhead,
                 config=config, state_machine_factory=factory)
@@ -57,52 +69,73 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
     others = [x for x in c.nodes if x != lead]
     t_start = c.sim.now
     eids = []
+    rids = []
+    n_burst_reads = int(burst * read_ratio)
     # Closed-loop load: each burst is submitted the moment the previous one
     # fully commits, so elapsed time measures sustained replication rate.
     for b in range(n_bursts):
         burst_eids = []
+        burst_rids = []
+        n_writes = burst - n_burst_reads
         if batch:
             if proposers == "single":
                 burst_eids += c.submit_batch(
-                    [_command(workload, b, i) for i in range(burst)],
+                    [_command(workload, b, i) for i in range(n_writes)],
                     via=others[0])
             else:
                 for k, via in enumerate(others):
-                    cmds = [_command(workload, b, i) for i in range(burst)
+                    cmds = [_command(workload, b, i) for i in range(n_writes)
                             if i % len(others) == k]
                     if cmds:
                         burst_eids += c.submit_batch(cmds, via=via)
         else:
-            for i in range(burst):
+            for i in range(n_writes):
                 via = others[0] if proposers == "single" else others[i % len(others)]
                 burst_eids.append(c.submit(_command(workload, b, i), via=via))
+        for i in range(n_burst_reads):
+            via = others[0] if proposers == "single" else others[i % len(others)]
+            burst_rids.append(
+                c.read(f"GET key{(b * 131 + i) % KV_KEYS}", via=via)
+            )
         c.run_until_committed(burst_eids, 120_000)
+        if burst_rids:
+            c.run_until_reads(burst_rids, 120_000)
         eids += burst_eids
+        rids += burst_rids
     c.check_log_consistency()
-    # Elapsed from commit timestamps, not sim.now: run_until_committed only
-    # polls its stop condition every few events, and that overshoot would
-    # swamp the fast (event-sparse) configurations.
+    # Elapsed from commit/serve timestamps, not sim.now: run_until_committed
+    # only polls its stop condition every few events, and that overshoot
+    # would swamp the fast (event-sparse) configurations.
     commit_times = [
         c.metrics.traces[e].first_commit_at for e in eids
         if c.metrics.traces.get(e) is not None and c.metrics.traces[e].committed
     ]
+    commit_times += [
+        c.reads[r]["completed_at"] for r in rids
+        if c.reads[r]["completed_at"] is not None
+    ]
     elapsed = (max(commit_times) - t_start) if commit_times else (c.sim.now - t_start)
+    n_reads_done = sum(1 for r in rids if c.reads[r]["completed_at"] is not None)
     n_committed = len(c.metrics.latencies())
     fast_commits = c.metrics.counters.get("fast_commits", 0)
     return {
-        "ops_per_sec": n_committed / (elapsed / 1000.0),
+        "ops_per_sec": (n_committed + n_reads_done) / (elapsed / 1000.0),
         "committed": n_committed,
+        "reads_done": n_reads_done,
         "fast_share": fast_commits / max(n_committed, 1),
         "mean_latency": c.metrics.mean_latency() or float("nan"),
+        "lease_reads": c.metrics.counters.get("lease_reads", 0),
     }
 
 
 def batching_speedup(protocol: str = "fastraft", burst: int = 64,
-                     seed: int = 3) -> Dict[str, float]:
+                     seed: int = 3, n_bursts: int = 5) -> Dict[str, float]:
     """Headline number: batched vs unbatched ops/sec at loss=0 on the same
     deterministic schedule."""
-    unbatched = run(protocol, burst, loss=0.0, seed=seed, batch=False)
-    batched = run(protocol, burst, loss=0.0, seed=seed, batch=True)
+    unbatched = run(protocol, burst, n_bursts=n_bursts, loss=0.0, seed=seed,
+                    batch=False)
+    batched = run(protocol, burst, n_bursts=n_bursts, loss=0.0, seed=seed,
+                  batch=True)
     return {
         "unbatched_ops_per_sec": unbatched["ops_per_sec"],
         "batched_ops_per_sec": batched["ops_per_sec"],
@@ -110,33 +143,63 @@ def batching_speedup(protocol: str = "fastraft", burst: int = 64,
     }
 
 
-def main() -> List[Dict]:
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI mode: smaller matrix, fewer bursts")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write result rows as JSON (CI artifact)")
+    ap.add_argument("--workload", choices=("append", "kv"), default="append")
+    ap.add_argument("--read-ratio", type=float, default=0.0,
+                    help="fraction of each burst issued as linearizable GETs"
+                         " on the read path (kv workload)")
+    args = ap.parse_args(argv)
+    smoke = args.smoke
+    n_bursts = 2 if smoke else 5
+    bursts = (16,) if smoke else (4, 16, 64)
+
     rows = []
     for protocol in ("raft", "fastraft"):
-        for burst in (4, 16, 64):
-            for batch in (False, True):
-                r = run(protocol, burst, batch=batch)
+        for burst in bursts:
+            for batch in ((True,) if smoke else (False, True)):
+                r = run(protocol, burst, n_bursts=n_bursts, batch=batch)
                 r.update(protocol=protocol, burst=burst, proposers="single",
                          batch=batch)
                 rows.append(r)
     # The conflict regime (paper: "as long as proposals remain largely
     # non-conflicting" — here they are NOT, deliberately).
-    r = run("fastraft", 16, proposers="all")
+    r = run("fastraft", 16, n_bursts=n_bursts, proposers="all")
     r.update(protocol="fastraft", burst=16, proposers="all", batch=False)
     rows.append(r)
     # The key-value regime: KVMachine + compaction, snapshots O(live keys).
+    kv_ratio = args.read_ratio if args.workload == "kv" else 0.0
     for batch in (False, True):
-        r = run("fastraft", 16, batch=batch, workload="kv")
+        r = run("fastraft", 16, n_bursts=n_bursts, batch=batch, workload="kv",
+                read_ratio=kv_ratio)
         r.update(protocol="fastraft-kv", burst=16, proposers="single",
                  batch=batch)
+        rows.append(r)
+    # The read-heavy KV regime: 75% of each burst takes the linearizable
+    # read path instead of the log (ReadIndex, then zero-round leases).
+    for lease in (False, True):
+        r = run("fastraft", 16, n_bursts=n_bursts, workload="kv",
+                read_ratio=0.75, lease=lease)
+        r.update(protocol="fastraft-kv-read" + ("-lease" if lease else ""),
+                 burst=16, proposers="single", batch=False)
         rows.append(r)
     print("protocol,proposers,burst,batch,ops_per_sec,fast_share,mean_latency_ms")
     for r in rows:
         print(f"{r['protocol']},{r['proposers']},{r['burst']},{int(r['batch'])},"
               f"{r['ops_per_sec']:.1f},{r['fast_share']:.2f},{r['mean_latency']:.2f}")
-    s = batching_speedup()
+    s = batching_speedup(n_bursts=n_bursts)
     print(f"batching speedup at loss=0: {s['speedup']:.2f}x "
           f"({s['unbatched_ops_per_sec']:.0f} -> {s['batched_ops_per_sec']:.0f} ops/s)")
+    rows.append({"protocol": "batching_speedup", "proposers": "single",
+                 "burst": 64, "batch": True, **s})
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
     return rows
 
 

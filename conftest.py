@@ -1,0 +1,11 @@
+"""Pytest rootdir hook: put the repo root on sys.path.
+
+The suite imports sibling top-level packages (``from benchmarks import
+throughput`` in tests/test_benchmarks.py). ``python -m pytest`` gets this
+for free (cwd goes on sys.path); the ``pytest`` console script does not —
+without this file collection fails before a single test runs.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -50,6 +50,19 @@ lossy networks: if the leader's own slot was claimed by a conflicting
 proposal, it lacks the losing command's payload (FastVotes carry ids, not
 payloads) and cannot fall the loser back itself; the proposer's inflight
 timeout re-routes the command through the classic track instead.
+
+Linearizable reads under the fast track (the read-visibility rule): a
+fast-committed write only becomes client-visible (acked) through
+``_merge_finalized`` -> ``_advance_commit`` on the LEADER, which bumps
+``commit_index`` and applies the entry synchronously BEFORE the
+FastFinalize broadcast leaves the handler. Finalized-but-held slots
+(non-contiguous, awaiting their gap) are NOT committed and were never
+acked, so they are invisible to reads by construction. The base read path
+(ReadIndex + leases, ``repro.core.raft``) therefore stays exact here:
+``read_index = commit_index`` covers every fast-acked write by the time
+any later read can arrive, and ``_advance_commit``'s pending-read drain
+releases queued reads the instant a fast-track merge advances the
+read-visible index.
 """
 from __future__ import annotations
 
@@ -413,6 +426,10 @@ class FastRaftNode(RaftNode):
     def _handle_FastFinalize(self, msg: FastFinalize, now: float) -> Outputs:
         if msg.term < self.term:
             return []
+        # Finalize comes from the live leader: counts as leader contact for
+        # lease-mode vote stickiness (it does NOT reset the election timer —
+        # heartbeats own liveness detection, exactly as in the seed).
+        self._last_leader_contact = now
         window = msg.window if msg.window else (
             (msg.entry,) if msg.entry is not None else ()
         )
@@ -586,6 +603,17 @@ class FastRaftNode(RaftNode):
         self._finalized_held.clear()
         self._count("recoveries")
         return out
+
+    # ------------------------------------------------- linearizable reads
+
+    def _read_index(self) -> int:
+        """Read-visibility rule under the fast track (module docstring):
+        every fast-acked write is covered by commit_index before its
+        FastFinalize broadcast leaves, because _merge_finalized commits and
+        applies synchronously inside the vote handler. Held finalized slots
+        above the contiguous prefix were never acked, so excluding them is
+        exactly right — the base rule needs no widening."""
+        return self.commit_index
 
     # ------------------------------------------- classic-track interactions
 

@@ -67,6 +67,10 @@ class ShadowDeliveryMachine(StateMachine):
     def size_bytes(self) -> int:
         return self.inner.size_bytes()
 
+    def query(self, query: Any) -> Any:
+        # Read-only pass-through: shadow delivery only intercepts applies.
+        return self.inner.query(query)
+
     def applied_entries(self):
         return self.inner.applied_entries()
 
@@ -238,6 +242,23 @@ class HierarchicalCluster:
         if not leaders:
             return None
         return max(leaders, key=lambda p: self.global_nodes[p].term)
+
+    def read_pod(self, pod: str, query: Any, via_host: Optional[NodeId] = None) -> EntryId:
+        """Linearizable read served entirely INSIDE one pod: the query rides
+        the pod's local ReadIndex/lease path over fast intra-pod links and
+        never touches the global tier — the CD-Raft cross-domain-read
+        economy (cross-domain messages stay reserved for global commits).
+        Local-tier linearizability is exactly what the paper's hierarchy
+        offers: the pod's log IS the authority for pod-local state,
+        including down-propagated global shadow entries the pod has
+        committed. Returns the pod cluster's read id; the result lands in
+        ``self.pods[pod].reads``."""
+        return self.pods[pod].read(query, via=via_host)
+
+    def run_until_pod_reads(
+        self, pod: str, read_ids, max_time: float = 30_000.0
+    ) -> bool:
+        return self.pods[pod].run_until_reads(read_ids, max_time)
 
     def propose_global(self, command: Any, via_pod: Optional[str] = None) -> EntryId:
         via_pod = via_pod or self.pod_ids[0]

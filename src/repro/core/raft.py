@@ -41,6 +41,10 @@ from repro.core.types import (
     InstallSnapshotReply,
     Message,
     NodeId,
+    ReadIndexProbe,
+    ReadIndexProbeReply,
+    ReadQuery,
+    ReadReply,
     RequestVoteArgs,
     RequestVoteReply,
     Role,
@@ -55,6 +59,9 @@ from repro.core.types import (
 Outputs = List[Tuple[NodeId, Message]]
 
 CONFIG_PREFIX = "__config__:"  # membership-change commands
+NOOP_PREFIX = "__noop__:"      # read-barrier no-op (fresh leader, no
+                               # current-term commit yet); state machines
+                               # ignore it like other infrastructure cmds
 
 
 @dataclasses.dataclass
@@ -84,24 +91,81 @@ class RaftConfig:
     # next_index falls below the snapshot receive InstallSnapshot.
     snapshot_threshold: int = 0
     # Chunked snapshot transfer: when > 0, InstallSnapshot streams the
-    # serialized snapshot in chunks of this many bytes (at most one chunk in
-    # flight per follower, offset-based resume, retransmit on heartbeat) so
-    # a lossy link resumes a partial transfer instead of restarting it.
-    # 0 = single-message InstallSnapshot (seed behavior).
+    # serialized snapshot in chunks of this many bytes (offset-based resume,
+    # retransmit on heartbeat) so a lossy link resumes a partial transfer
+    # instead of restarting it. 0 = single-message InstallSnapshot (seed
+    # behavior).
     snapshot_chunk_bytes: int = 0
+    # Pipelined chunk transfer: how many chunks a leader keeps in flight per
+    # follower. 1 = strictly serial (one RTT per chunk; the pre-pipelining
+    # behavior); larger windows amortize the RTT across the window while the
+    # follower's cursor stays authoritative (an out-of-order/lost chunk
+    # rewinds the sender to the acked offset exactly once per stall).
+    snapshot_chunk_window: int = 1
+    # Linearizable read path. Reads never ride the log: the leader either
+    # confirms leadership with one ReadIndexProbe quorum round (ReadIndex,
+    # always available) or — when lease_duration_ms > 0 — serves with ZERO
+    # message rounds under a fresh heartbeat-quorum lease. The effective
+    # lease span is min(lease_duration_ms, election_timeout_min) minus
+    # clock_skew_ms: a quorum that acked a round sent at local time t has
+    # reset its election timers no earlier than t, so no rival leader can
+    # exist before t + election_timeout_min; clock_skew_ms is the safety
+    # margin for per-node clock drift (sim: Cluster(clock_drift=...)).
+    # Lease mode also enables vote stickiness (a follower refuses to grant
+    # votes within election_timeout_min of leader contact), without which
+    # a disruptive candidate could be elected inside a live leader's lease.
+    lease_duration_ms: float = 0.0
+    clock_skew_ms: float = 0.0
+    # Origin-side read retry interval (lost ReadQuery/ReadReply, leader
+    # churn). 0 = use election_timeout_min.
+    read_retry_timeout: float = 0.0
 
 
 @dataclasses.dataclass
 class _SnapshotTransfer:
     """Leader-side progress of one chunked snapshot transfer to one
-    follower. ``offset`` is the follower-acknowledged cursor: the next chunk
-    always starts there, so a heartbeat retransmission after loss resends
-    the unacked chunk rather than restarting the stream."""
+    follower. ``offset`` is the follower-acknowledged cursor — the resume
+    point after loss or a heartbeat retransmission. ``send_cursor`` is the
+    optimistic send position when a window of chunks is pipelined
+    (``RaftConfig.snapshot_chunk_window`` > 1); it rewinds to ``offset``
+    when the follower reports a gap (``rewind_mark`` dedups the rewind so a
+    burst of stall acks from one lost chunk triggers one resend, not one
+    per ack)."""
 
     last_index: int
     last_term: int
     data: bytes
     offset: int = 0
+    send_cursor: int = 0
+    rewind_mark: int = -1
+
+
+@dataclasses.dataclass
+class _PendingRead:
+    """Leader-side linearizable read awaiting confirmation + apply.
+
+    Served once (a) a leadership-confirmation round SENT at or after
+    ``arrived_at`` has been acked by a quorum (or the read was admitted
+    under a valid lease), (b) an entry of the leader's current term has
+    committed (the read barrier), and (c) ``last_applied >= read_index``.
+    ``origin`` is the node to send the ReadReply to ("" = a client local to
+    this node, delivered via ``read_done_fn``)."""
+
+    read_id: Any
+    query: Any
+    origin: NodeId
+    read_index: int
+    arrived_at: float
+
+
+@dataclasses.dataclass
+class _ClientRead:
+    """Origin-side bookkeeping for one in-flight read: enough to re-route
+    the (idempotent) query after leader churn or message loss."""
+
+    query: Any
+    issued_at: float
+    last_sent: float = -1.0e18
 
 
 class RaftNode:
@@ -188,6 +252,40 @@ class RaftNode:
         self.alive = True
         self.metrics = None  # injected by the harness (core.metrics.Recorder)
 
+        # ----- Linearizable read path -----
+        # Simulated local clock: local_time(now) = offset + now*(1+drift).
+        # Constant offsets cancel out of duration arithmetic; RATE drift is
+        # the real-world hazard the lease's clock_skew_ms margin covers.
+        # The harness (sim.Cluster) sets these per node.
+        self.clock_offset = 0.0
+        self.clock_drift = 0.0
+        # Origin-side in-flight reads (this node is where the client
+        # submitted); completion is delivered through read_done_fn.
+        self._reads_inflight: Dict[Any, _ClientRead] = {}
+        self.read_done_fn: Optional[Callable[[Any, dict], None]] = None
+        # Leader-side pending reads + the quorum-round/lease accounting.
+        # _hb_round is a monotone round counter shared by heartbeat
+        # broadcasts and ReadIndexProbes; _round_sent maps round -> (sim
+        # send time, local-clock send time); a quorum of echoes for round r
+        # confirms leadership as of r's send time.
+        self._reads_pending: List[_PendingRead] = []
+        self._reads_pending_ids: set = set()
+        self._hb_round = 0
+        self._round_sent: Dict[int, Tuple[float, float]] = {}
+        self._peer_acked_round: Dict[NodeId, int] = {}
+        self._quorum_round = 0
+        self._confirmed_sent_sim = -1.0e18   # sim send time of newest
+                                             # quorum-confirmed round
+        self._lease_expiry_local = -1.0e18   # local-clock lease expiry
+        self._noop_term = 0                  # term we appended a barrier
+                                             # no-op for (at most one each)
+        # Follower-side: last time a valid leader contacted us, for vote
+        # stickiness under lease mode (see RaftConfig.lease_duration_ms).
+        self._last_leader_contact = -1.0e18
+        # Replies generated at points with no Outputs channel (e.g. reads
+        # unblocked inside _advance_commit); drained by on_message/on_tick.
+        self._outbox: Outputs = []
+
     # ---------------------------------------------------------------- util
 
     @property
@@ -246,6 +344,44 @@ class RaftNode:
         if self.metrics is not None:
             self.metrics.count(kind, n)
 
+    # ---------------------------------------------------- read-path helpers
+
+    def local_time(self, now: float) -> float:
+        """This node's wall clock (sim time + offset + rate drift). Lease
+        arithmetic runs on local clocks only — that is exactly the skew
+        hazard clock_skew_ms must cover."""
+        return self.clock_offset + now * (1.0 + self.clock_drift)
+
+    def _lease_span(self) -> float:
+        """Effective lease duration. Capped at election_timeout_min (no
+        follower can grant a vote sooner than that after acking us — the
+        safety bound) minus the clock-skew margin; <= 0 disables leases."""
+        c = self.config
+        if c.lease_duration_ms <= 0:
+            return 0.0
+        return min(c.lease_duration_ms, c.election_timeout_min) - c.clock_skew_ms
+
+    def _lease_valid(self, now: float) -> bool:
+        return (
+            self.role is Role.LEADER
+            and self._lease_span() > 0.0
+            and self.local_time(now) < self._lease_expiry_local
+        )
+
+    def _term_barrier_ok(self) -> bool:
+        """A leader may serve reads only after an entry of ITS term has
+        committed (Raft §8): before that, commit_index may lag entries
+        earlier leaders committed that we haven't learned are committed.
+        When no write traffic would ever satisfy this, _leader_read appends
+        a __noop__ barrier entry (once per term)."""
+        return self.commit_index > 0 and self.term_at(self.commit_index) == self.term
+
+    def _read_index(self) -> int:
+        """The index a pending read must see applied before it can be
+        served. FastRaft hook (fast-track commits advance commit_index
+        synchronously with apply, so commit_index stays exact there too)."""
+        return self.commit_index
+
     # ------------------------------------------------------ election state
 
     def _reset_election_timer(self, now: float) -> None:
@@ -270,7 +406,29 @@ class RaftNode:
         self._inflight = {}
         self._pipe_next = {}
         self._snap_xfer = {}
+        self._reset_read_leadership_state()
         self._reset_election_timer(now)
+
+    def _reset_read_leadership_state(self) -> None:
+        """Drop all leadership-scoped read/lease state. Pending reads from
+        remote origins get a retry-hint reply (via the outbox); local
+        origins stay in _reads_inflight and re-route on the next tick."""
+        for r in self._reads_pending:
+            if r.origin and r.origin != self.id:
+                self._outbox.append(
+                    (
+                        r.origin,
+                        ReadReply(term=self.term, src=self.id, read_id=r.read_id,
+                                  ok=False, leader_hint=self.leader_id),
+                    )
+                )
+        self._reads_pending = []
+        self._reads_pending_ids = set()
+        self._round_sent = {}
+        self._peer_acked_round = {}
+        self._quorum_round = 0
+        self._confirmed_sent_sim = -1.0e18
+        self._lease_expiry_local = -1.0e18
 
     def _become_candidate(self, now: float) -> Outputs:
         self.term += 1
@@ -308,6 +466,7 @@ class RaftNode:
         self._inflight = {}
         self._pipe_next = {}
         self._snap_xfer = {}
+        self._reset_read_leadership_state()
         self.next_heartbeat = now  # fire immediately
         self._count("leader_elected")
         if self.metrics is not None:
@@ -359,6 +518,23 @@ class RaftNode:
         elif now >= self.election_deadline:
             out += self._become_candidate(now)
         out += self._tick_protocol(now)  # FastRaft hook (fast-slot timeouts)
+        # Origin-side read retries: reads are idempotent, so lost
+        # ReadQuery/ReadReply messages and leader churn are handled by
+        # simply re-routing toward the current leader.
+        if self._reads_inflight:
+            retry = self.config.read_retry_timeout or self.config.election_timeout_min
+            for rid in list(self._reads_inflight):
+                cr = self._reads_inflight.get(rid)
+                if cr is not None and now - cr.last_sent >= retry:
+                    if cr.last_sent > -1.0e17:
+                        self._count("read_retries")
+                    out += self._route_read(rid, now)
+        return self._drain_outbox(out)
+
+    def _drain_outbox(self, out: Outputs) -> Outputs:
+        if self._outbox:
+            out = out + self._outbox
+            self._outbox = []
         return out
 
     def _tick_protocol(self, now: float) -> Outputs:
@@ -374,14 +550,23 @@ class RaftNode:
             self._become_follower(msg.term, now)
         handler = getattr(self, f"_handle_{type(msg).__name__}", None)
         if handler is None:
-            return []
-        return handler(msg, now)
+            return self._drain_outbox([])
+        return self._drain_outbox(handler(msg, now))
 
     # -- RequestVote
 
     def _handle_RequestVoteArgs(self, msg: RequestVoteArgs, now: float) -> Outputs:
         grant = False
-        if msg.term >= self.term:
+        # Vote stickiness (lease mode only): refuse to elect a rival within
+        # election_timeout_min of hearing from a live leader. Without this a
+        # disruptive candidate could win DURING an active lease and commit
+        # writes the lease holder's local reads would then miss. Only
+        # enabled with leases so lease-free configs keep seed behavior.
+        sticky = (
+            self.config.lease_duration_ms > 0
+            and now - self._last_leader_contact < self.config.election_timeout_min
+        )
+        if msg.term >= self.term and not sticky:
             lli, llt = self._election_log_position()
             up_to_date = (msg.last_log_term, msg.last_log_index) >= (llt, lli)
             if up_to_date and self.voted_for in (None, msg.candidate_id):
@@ -413,7 +598,19 @@ class RaftNode:
         the known-replicated point — so a broadcast doubles as retransmission
         of batches lost since the last one. Followers with nothing to pull
         get a plain heartbeat.
+
+        Every broadcast is a leadership-confirmation round: it gets a fresh
+        round id stamped on its messages, and a quorum of echoes renews the
+        lease / confirms pending ReadIndex reads (see _note_round_ack).
         """
+        self._hb_round += 1
+        self._round_sent[self._hb_round] = (now, self.local_time(now))
+        if len(self._round_sent) > 1024:
+            # A leader cut off from its quorum keeps broadcasting; dropping
+            # the oldest unconfirmed rounds only delays a (doomed) lease
+            # renewal, never extends one.
+            for r in sorted(self._round_sent)[: len(self._round_sent) - 1024]:
+                del self._round_sent[r]
         out: Outputs = []
         for p in self.peers():
             self._inflight[p] = 0
@@ -438,6 +635,7 @@ class RaftNode:
             prev_log_term=self.term_at(prev),
             entries=(),
             leader_commit=self.commit_index,
+            hb_id=self._hb_round,
         )
 
     def _replicate_to_peer(self, peer: NodeId) -> Outputs:
@@ -466,6 +664,11 @@ class RaftNode:
                         prev_log_term=self.term_at(start - 1),
                         entries=entries,
                         leader_commit=self.commit_index,
+                        # Replication sent between broadcasts reuses the
+                        # last round id: its send time is recorded as the
+                        # (earlier) broadcast time, which only SHORTENS the
+                        # lease this ack can grant — the safe direction.
+                        hb_id=self._hb_round,
                     ),
                 )
             )
@@ -476,15 +679,16 @@ class RaftNode:
 
     def _send_snapshot(self, peer: NodeId) -> Outputs:
         """Catch a follower up past the compaction horizon: one monolithic
-        InstallSnapshot (snapshot_chunk_bytes == 0) or the next chunk of a
-        streamed transfer. Either way at most one message is in flight; the
-        heartbeat broadcast clears the inflight mark and re-sends, which
-        doubles as retransmission after loss."""
-        if self._inflight.get(peer, 0) > 0:
-            return []  # one snapshot message in flight at a time
-        self._inflight[peer] = 1
+        InstallSnapshot (snapshot_chunk_bytes == 0) or a window of chunks of
+        a streamed transfer (``snapshot_chunk_window`` in flight at once;
+        1 = strictly serial). The heartbeat broadcast clears the inflight
+        count and re-sends from the follower-acked offset, which doubles as
+        retransmission after loss."""
         chunk = self.config.snapshot_chunk_bytes
         if chunk <= 0:
+            if self._inflight.get(peer, 0) > 0:
+                return []  # one snapshot message in flight at a time
+            self._inflight[peer] = 1
             self._count("snapshots_sent")
             # Pre-warm the size cache on OUR snapshot so every clone sent
             # (one per retransmission) inherits it instead of re-serializing
@@ -502,6 +706,9 @@ class RaftNode:
                     ),
                 )
             ]
+        w = max(1, self.config.snapshot_chunk_window)
+        if self._inflight.get(peer, 0) >= w:
+            return []
         xfer = self._snap_xfer.get(peer)
         if xfer is None or xfer.last_index != self.snapshot.last_index:
             # New transfer (or the leader compacted again mid-transfer, which
@@ -513,26 +720,40 @@ class RaftNode:
             )
             self._snap_xfer[peer] = xfer
             self._count("snapshots_sent")
-        data = xfer.data[xfer.offset : xfer.offset + chunk]
-        done = xfer.offset + len(data) >= len(xfer.data)
-        self._count("snapshot_chunks_sent")
-        return [
-            (
-                peer,
-                InstallSnapshotChunk(
-                    term=self.term,
-                    src=self.id,
-                    leader_id=self.id,
-                    last_index=xfer.last_index,
-                    last_term=xfer.last_term,
-                    offset=xfer.offset,
-                    data=data,
-                    total_bytes=len(xfer.data),
-                    done=done,
-                    leader_commit=self.commit_index,
-                ),
+        if self._inflight.get(peer, 0) == 0:
+            # Fresh round (first send, or a heartbeat retransmission after
+            # the window went quiet): resume from the acked cursor.
+            xfer.send_cursor = xfer.offset
+        out: Outputs = []
+        while self._inflight.get(peer, 0) < w:
+            off = xfer.send_cursor
+            data = xfer.data[off : off + chunk]
+            done = off + len(data) >= len(xfer.data)
+            if not data and len(xfer.data) > 0:
+                break  # window ran past the end; await acks
+            self._count("snapshot_chunks_sent")
+            out.append(
+                (
+                    peer,
+                    InstallSnapshotChunk(
+                        term=self.term,
+                        src=self.id,
+                        leader_id=self.id,
+                        last_index=xfer.last_index,
+                        last_term=xfer.last_term,
+                        offset=off,
+                        data=data,
+                        total_bytes=len(xfer.data),
+                        done=done,
+                        leader_commit=self.commit_index,
+                    ),
+                )
             )
-        ]
+            self._inflight[peer] = self._inflight.get(peer, 0) + 1
+            xfer.send_cursor = off + len(data)
+            if done:
+                break
+        return out
 
     def _handle_AppendEntriesArgs(self, msg: AppendEntriesArgs, now: float) -> Outputs:
         if msg.term < self.term:
@@ -543,6 +764,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
+        self._last_leader_contact = now
         deferred: Outputs = self._flush_pending(now) if first_leader_contact else []
 
         # Consistency check. Tentative slots don't count as matching history:
@@ -559,7 +781,8 @@ class RaftNode:
                     (
                         msg.src,
                         AppendEntriesReply(
-                            term=self.term, src=self.id, success=False, match_index=0
+                            term=self.term, src=self.id, success=False,
+                            match_index=0, hb_id=msg.hb_id,
                         ),
                     )
                 ]
@@ -586,12 +809,17 @@ class RaftNode:
             src=self.id,
             success=True,
             match_index=msg.prev_log_index + len(msg.entries),
+            hb_id=msg.hb_id,
         )
         return deferred + [(msg.src, reply)]
 
     def _handle_AppendEntriesReply(self, msg: AppendEntriesReply, now: float) -> Outputs:
         if self.role is not Role.LEADER or msg.term < self.term:
             return []
+        # Any equal-term reply — success or not — is the follower's word
+        # that it still recognizes this leadership; echoed round ids feed
+        # the lease / ReadIndex confirmation accounting.
+        ack_out = self._note_round_ack(msg.src, msg.hb_id, now)
         if msg.success:
             self._inflight[msg.src] = max(0, self._inflight.get(msg.src, 0) - 1)
             self.match_index[msg.src] = max(self.match_index.get(msg.src, 0), msg.match_index)
@@ -604,7 +832,7 @@ class RaftNode:
             # carries the next batch if the follower still lags.
             more = self._replicate_to_peer(msg.src)
             self._count("msgs_out", len(more))
-            return out + more
+            return ack_out + out + more
         # Back up (simple decrement; fine at sim scale) and restart the
         # pipeline from the new next_index.
         self.next_index[msg.src] = max(1, self.next_index.get(msg.src, 1) - 8)
@@ -612,7 +840,7 @@ class RaftNode:
         self._pipe_next[msg.src] = self.next_index[msg.src]
         more = self._replicate_to_peer(msg.src)
         self._count("msgs_out", len(more))
-        return more
+        return ack_out + more
 
     # -- client path
 
@@ -711,6 +939,250 @@ class RaftNode:
         pairs = [(msg.command, msg.entry_id)] + list(msg.batch)
         return self._leader_append_many(pairs, now)
 
+    # ----------------------------------------------- linearizable read path
+
+    def client_read(self, query: Any, now: float, read_id: Any = None) -> Outputs:
+        """Entry point for a linearizable read submitted at this node.
+
+        The read never touches the log: it is routed to the leader, which
+        serves it from its local state machine after proving it is still
+        the leader — one ReadIndexProbe quorum round, or zero rounds under
+        a fresh heartbeat-quorum lease. Completion is delivered through
+        ``read_done_fn(read_id, result)``."""
+        if not self.alive:
+            return []
+        if read_id is None:
+            read_id = EntryId(f"{self.id}/read", self.next_seq())
+        if read_id in self._reads_inflight:
+            return []  # duplicate client retry
+        self._reads_inflight[read_id] = _ClientRead(query=query, issued_at=now)
+        self._count("reads_submitted")
+        return self._drain_outbox(self._route_read(read_id, now))
+
+    def _route_read(self, read_id: Any, now: float) -> Outputs:
+        cr = self._reads_inflight.get(read_id)
+        if cr is None:
+            return []
+        if self.role is Role.LEADER:
+            cr.last_sent = now
+            return self._leader_read(read_id, cr.query, "", now)
+        if self.leader_id is not None and self.leader_id != self.id:
+            cr.last_sent = now
+            self._count("read_forwards")
+            return [
+                (
+                    self.leader_id,
+                    ReadQuery(term=self.term, src=self.id, read_id=read_id,
+                              query=cr.query),
+                )
+            ]
+        return []  # no leader known yet; the tick loop retries
+
+    def _handle_ReadQuery(self, msg: ReadQuery, now: float) -> Outputs:
+        if msg.read_id is None:
+            return []
+        if self.role is Role.LEADER:
+            return self._leader_read(msg.read_id, msg.query, msg.src, now)
+        if (
+            self.leader_id is not None
+            and self.leader_id not in (self.id, msg.src)
+        ):
+            return [(self.leader_id, msg)]  # re-forward toward the leader
+        return [
+            (
+                msg.src,
+                ReadReply(term=self.term, src=self.id, read_id=msg.read_id,
+                          ok=False, leader_hint=self.leader_id),
+            )
+        ]
+
+    def _handle_ReadReply(self, msg: ReadReply, now: float) -> Outputs:
+        cr = self._reads_inflight.get(msg.read_id)
+        if cr is None:
+            return []  # completed already (duplicate serve) or unknown
+        if msg.ok:
+            self._read_complete(
+                msg.read_id,
+                {"ok": True, "value": msg.value, "served_index": msg.served_index},
+            )
+            return []
+        # The serving node lost leadership: fail over toward its hint, or
+        # wait for the tick retry to discover the new leader. A hint
+        # pointing back at us while we are NOT leader is stale topology —
+        # re-routing instantly would ping-pong between two confused nodes,
+        # so that case waits for the (rate-limited) tick retry.
+        self._count("read_failovers")
+        if self.role is Role.LEADER:
+            return self._route_read(msg.read_id, now)
+        if msg.leader_hint and msg.leader_hint not in (self.id, msg.src):
+            cr.last_sent = now
+            return [
+                (
+                    msg.leader_hint,
+                    ReadQuery(term=self.term, src=self.id, read_id=msg.read_id,
+                              query=cr.query),
+                )
+            ]
+        return []
+
+    def _read_complete(self, read_id: Any, result: dict) -> None:
+        cr = self._reads_inflight.pop(read_id, None)
+        if cr is not None and self.read_done_fn is not None:
+            self.read_done_fn(read_id, result)
+
+    def _leader_read(self, read_id: Any, query: Any, origin: NodeId, now: float) -> Outputs:
+        """Admit a read at the leader: serve instantly under a valid lease,
+        else queue it behind one leadership-confirmation round."""
+        if read_id in self._reads_pending_ids:
+            return []  # duplicate (origin retry raced our reply)
+        out: Outputs = []
+        barrier_ok = self._term_barrier_ok()
+        if not barrier_ok:
+            out += self._append_term_noop(now)
+        if barrier_ok and self._lease_valid(now):
+            self._count("lease_reads")
+            return out + self._finish_read(
+                _PendingRead(read_id, query, origin, self._read_index(), now), now
+            )
+        self._reads_pending.append(
+            _PendingRead(read_id, query, origin, self._read_index(), now)
+        )
+        self._reads_pending_ids.add(read_id)
+        if self.peers():
+            out += self._send_read_probe(now)
+        return out
+
+    def _append_term_noop(self, now: float) -> Outputs:
+        """Read barrier for a fresh leader with no current-term commit: one
+        no-op entry per term, appended lazily only when a read needs it."""
+        if self._noop_term == self.term:
+            return []
+        self._noop_term = self.term
+        self._count("read_barrier_noops")
+        return self._leader_append(
+            NOOP_PREFIX + str(self.term), EntryId(self.id, self.next_seq()), now
+        )
+
+    def _send_read_probe(self, now: float) -> Outputs:
+        """One leadership-confirmation round for the pending reads. Shares
+        the round-id space with heartbeat broadcasts; a lost probe is
+        covered by the next heartbeat round (sent after the read arrived,
+        so its quorum confirms the read too)."""
+        self._hb_round += 1
+        self._round_sent[self._hb_round] = (now, self.local_time(now))
+        probe = ReadIndexProbe(term=self.term, src=self.id, leader_id=self.id,
+                               probe_id=self._hb_round)
+        out: Outputs = [(p, probe) for p in self.peers()]
+        self._count("read_probes")
+        self._count("msgs_out", len(out))
+        return out
+
+    def _handle_ReadIndexProbe(self, msg: ReadIndexProbe, now: float) -> Outputs:
+        if msg.term < self.term:
+            return [
+                (
+                    msg.src,
+                    ReadIndexProbeReply(term=self.term, src=self.id,
+                                        probe_id=msg.probe_id, ok=False),
+                )
+            ]
+        # Acking a probe is the same promise as acking a heartbeat: we
+        # recognize this leader NOW and restart our election timer — which
+        # is exactly what makes the ack usable as a lease basis.
+        self.leader_id = msg.leader_id
+        if self.role is not Role.FOLLOWER:
+            self._become_follower(msg.term, now)
+        self._reset_election_timer(now)
+        self._last_leader_contact = now
+        return [
+            (
+                msg.src,
+                ReadIndexProbeReply(term=self.term, src=self.id,
+                                    probe_id=msg.probe_id, ok=True),
+            )
+        ]
+
+    def _handle_ReadIndexProbeReply(self, msg: ReadIndexProbeReply, now: float) -> Outputs:
+        if self.role is not Role.LEADER or msg.term < self.term or not msg.ok:
+            return []
+        return self._note_round_ack(msg.src, msg.probe_id, now)
+
+    def _note_round_ack(self, peer: NodeId, round_id: int, now: float) -> Outputs:
+        """A peer echoed round ``round_id`` in the current term. When the
+        quorum-th highest acked round advances, leadership is confirmed as
+        of that round's SEND time: the lease extends from it, and pending
+        reads that arrived at or before it become servable."""
+        if self.role is not Role.LEADER or round_id <= 0:
+            return []
+        if round_id > self._peer_acked_round.get(peer, 0):
+            self._peer_acked_round[peer] = round_id
+        need = self.quorum() - 1  # self counts for the quorum
+        if need <= 0:
+            return self._serve_ready_reads(now)
+        acked = sorted(
+            (self._peer_acked_round.get(p, 0) for p in self.peers()), reverse=True
+        )
+        if len(acked) < need:
+            return []
+        q = acked[need - 1]
+        if q <= self._quorum_round or q not in self._round_sent:
+            return []  # no progress, or a stale echo from pruned history
+        self._quorum_round = q
+        sent_sim, sent_local = self._round_sent[q]
+        self._confirmed_sent_sim = sent_sim
+        span = self._lease_span()
+        if span > 0:
+            self._lease_expiry_local = max(
+                self._lease_expiry_local, sent_local + span
+            )
+        for r in [r for r in self._round_sent if r < q]:
+            del self._round_sent[r]
+        return self._serve_ready_reads(now)
+
+    def _serve_ready_reads(self, now: float) -> Outputs:
+        """Serve every pending read whose confirmation round was sent at or
+        after it arrived, once the read barrier holds and the read index is
+        applied. Called from ack paths and (via the outbox) from
+        _advance_commit, so fast-track merges and barrier commits release
+        waiting reads immediately."""
+        if not self._reads_pending or self.role is not Role.LEADER:
+            return []
+        if not self._term_barrier_ok():
+            return []
+        confirmed_at = self._confirmed_sent_sim
+        if not self.peers():
+            confirmed_at = now  # singleton group: self IS the quorum
+        out: Outputs = []
+        keep: List[_PendingRead] = []
+        for r in self._reads_pending:
+            if confirmed_at >= r.arrived_at and self.last_applied >= r.read_index:
+                self._reads_pending_ids.discard(r.read_id)
+                self._count("readindex_reads")
+                out += self._finish_read(r, now)
+            else:
+                keep.append(r)
+        self._reads_pending = keep
+        return out
+
+    def _finish_read(self, r: _PendingRead, now: float) -> Outputs:
+        """Evaluate the (read-only) query against the local machine and
+        deliver the result to the origin."""
+        value = self.state_machine.query(r.query)
+        self._count("reads_served")
+        if r.origin in ("", self.id):
+            self._read_complete(
+                r.read_id,
+                {"ok": True, "value": value, "served_index": self.last_applied},
+            )
+            return []
+        return [
+            (
+                r.origin,
+                ReadReply(term=self.term, src=self.id, read_id=r.read_id, ok=True,
+                          value=value, served_index=self.last_applied),
+            )
+        ]
+
     def _leader_append(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
         return self._leader_append_many([(command, entry_id)], now)
 
@@ -805,6 +1277,12 @@ class RaftNode:
         t = self.config.snapshot_threshold
         if t > 0 and self.last_applied - self.snapshot_last_index >= t:
             self.compact()
+        # Commit/apply progress can be what a pending read was waiting for
+        # (the term-barrier no-op landing, or a classic/fast-track commit
+        # advancing the read-visible index). No Outputs channel here, so
+        # replies leave via the outbox.
+        if self.role is Role.LEADER and self._reads_pending:
+            self._outbox += self._serve_ready_reads(now)
 
     # ---------------------------------------------------- snapshot/compaction
 
@@ -907,6 +1385,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
+        self._last_leader_contact = now
         snap = msg.snapshot
         if snap.last_index > self.commit_index:
             self._install_snapshot(snap, now)
@@ -968,6 +1447,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
+        self._last_leader_contact = now
         if msg.last_index <= self.commit_index:
             # Already caught up past this snapshot (e.g. a duplicate final
             # chunk after install): tell the leader where to resume.
@@ -1042,7 +1522,11 @@ class RaftNode:
     ) -> Outputs:
         if self.role is not Role.LEADER or msg.term < self.term:
             return []
-        self._inflight[msg.src] = 0
+        w = max(1, self.config.snapshot_chunk_window)
+        if w <= 1:
+            self._inflight[msg.src] = 0
+        else:
+            self._inflight[msg.src] = max(0, self._inflight.get(msg.src, 0) - 1)
         if msg.match_index > 0:
             return self._snapshot_delivered(msg.src, msg.match_index, now)
         xfer = self._snap_xfer.get(msg.src)
@@ -1053,15 +1537,38 @@ class RaftNode:
             self._count("msgs_out", len(more))
             return more
         if msg.next_offset == xfer.offset:
-            # Duplicate ack of the position we are already at (a heartbeat
-            # retransmission produced a second reply, or our chunk is still
-            # in flight). Reacting would fork a parallel chunk stream —
-            # the heartbeat covers the genuinely-lost-chunk case.
+            if w <= 1:
+                # Duplicate ack of the position we are already at (a
+                # heartbeat retransmission produced a second reply, or our
+                # chunk is still in flight). Reacting would fork a parallel
+                # chunk stream — the heartbeat covers the genuinely-lost-
+                # chunk case.
+                return []
+            # Pipelined window: a no-progress ack is either a duplicate or
+            # the first gap report after a lost/reordered chunk. Rewind the
+            # send cursor to the acked offset ONCE per stall position
+            # (rewind_mark dedups the burst of gap acks one lost chunk
+            # produces); anything pathological beyond that rides the
+            # heartbeat retransmission.
+            if xfer.send_cursor > xfer.offset and xfer.rewind_mark != xfer.offset:
+                xfer.rewind_mark = xfer.offset
+                xfer.send_cursor = xfer.offset
+                self._inflight[msg.src] = 0
+                more = self._replicate_to_peer(msg.src)
+                self._count("msgs_out", len(more))
+                return more
             return []
         # The follower's cursor is authoritative: normally it advances past
         # the chunk we sent; after a follower restart it legitimately
-        # rewinds to 0. Either way the transfer RESUMES there.
-        xfer.offset = max(0, min(msg.next_offset, len(xfer.data)))
+        # rewinds to 0. Either way the transfer RESUMES there (a backward
+        # rewind also restarts the optimistic send window).
+        new_off = max(0, min(msg.next_offset, len(xfer.data)))
+        if new_off < xfer.offset:
+            xfer.send_cursor = new_off
+            self._inflight[msg.src] = 0
+        else:
+            xfer.send_cursor = max(xfer.send_cursor, new_off)
+        xfer.offset = new_off
         more = self._replicate_to_peer(msg.src)
         self._count("msgs_out", len(more))
         return more
@@ -1160,6 +1667,19 @@ class RaftNode:
         self._incoming_snap = None
         self._batch_buffer = []
         self._buffered_ids = set()
+        # Read/lease state is volatile: in-flight client reads die with the
+        # process (clients re-issue), leases and pending reads are
+        # leadership-scoped, the outbox never survives a crash.
+        self._reads_inflight = {}
+        self._reads_pending = []
+        self._reads_pending_ids = set()
+        self._round_sent = {}
+        self._peer_acked_round = {}
+        self._quorum_round = 0
+        self._confirmed_sent_sim = -1.0e18
+        self._lease_expiry_local = -1.0e18
+        self._last_leader_contact = -1.0e18
+        self._outbox = []
         if self.snapshot is not None:
             self.state_machine.restore(copy.deepcopy(self.snapshot.state))
             self._dedup = DedupTable.from_state(self.snapshot.dedup)

@@ -37,6 +37,8 @@ from repro.core.types import (
     InstallSnapshotChunk,
     Message,
     NodeId,
+    ReadQuery,
+    ReadReply,
 )
 
 # Rough fixed per-message framing cost (headers, term/id fields) for the
@@ -71,6 +73,10 @@ def wire_size(msg: Message) -> int:
             _entry_bytes_cmd(c) for c, _ in msg.batch
         )
         return _MSG_BASE_BYTES + n
+    if isinstance(msg, ReadQuery):
+        return _MSG_BASE_BYTES + len(str(msg.query))
+    if isinstance(msg, ReadReply):
+        return _MSG_BASE_BYTES + len(str(msg.value))
     return _MSG_BASE_BYTES
 
 
@@ -177,6 +183,8 @@ class Cluster:
         sim: Optional[Simulation] = None,
         snapshot_store=None,
         state_machine_factory: Optional[Callable[[NodeId], StateMachine]] = None,
+        clock_skew_ms: float = 0.0,
+        clock_drift: float = 0.0,
     ):
         self.sim = sim or Simulation(seed)
         self.link = LinkModel(loss, base_latency, jitter, msg_overhead,
@@ -196,6 +204,19 @@ class Cluster:
         # LogListMachine, the seed-identical default).
         self.state_machine_factory = state_machine_factory
         self._replacements: Dict[NodeId, int] = {}
+        # Skewed per-node clocks for the lease safety story: each node's
+        # wall clock is offset by U(-clock_skew_ms, clock_skew_ms) and runs
+        # at rate 1 + U(-clock_drift, clock_drift). Constant offsets cancel
+        # out of lease-duration arithmetic; RATE drift is the hazard
+        # RaftConfig.clock_skew_ms must cover. Both default to 0 (seed
+        # behavior, perfectly synchronized clocks).
+        self.clock_skew_ms = clock_skew_ms
+        self.clock_drift = clock_drift
+        # Linearizable read records: read_id -> {query, via, issued_at,
+        # ok, value, served_index, completed_at}. Populated by read() and
+        # completed through the nodes' read_done_fn.
+        self.reads: Dict[EntryId, Dict] = {}
+        self._read_counter = 0
 
         ids = [f"{node_prefix}{i}" for i in range(n)]
         self.nodes: Dict[NodeId, RaftNode] = {}
@@ -219,6 +240,13 @@ class Cluster:
         node = cls(nid, list(members), config=RaftConfig(**vars(self.config)),
                    seed=seed, state_machine=sm)
         node.metrics = self.metrics
+        node.read_done_fn = self._read_completed
+        if self.clock_skew_ms > 0 or self.clock_drift > 0:
+            # Separate RNG stream: drawing from node.rng would perturb the
+            # election-timeout schedule of every seed-default test.
+            r = random.Random(zlib.crc32(nid.encode()) ^ (seed * 7 + 13))
+            node.clock_offset = r.uniform(-self.clock_skew_ms, self.clock_skew_ms)
+            node.clock_drift = r.uniform(-self.clock_drift, self.clock_drift)
         if self.snapshot_store is not None:
             node.snapshot_sink = self.snapshot_store.save
             node.hard_state_sink = self.snapshot_store.save_hard_state
@@ -292,6 +320,51 @@ class Cluster:
         pairs = [(command, EntryId(via, node.next_seq())) for command in commands]
         self.dispatch(via, node.client_request_batch(pairs, self.sim.now))
         return [eid for _, eid in pairs]
+
+    def read(self, query, via: Optional[NodeId] = None) -> EntryId:
+        """Submit a linearizable read at ``via``: it forwards to the leader
+        and is served from applied state after a ReadIndex confirmation
+        round (or zero rounds under a leader lease) — it never rides the
+        log. Returns a read id; the outcome lands in ``self.reads`` (see
+        :meth:`read_value` / :meth:`run_until_reads`)."""
+        via = via or next(iter(self.nodes))
+        node = self.nodes[via]
+        self._read_counter += 1
+        # Cluster-scoped id stream: never collides with write EntryIds and
+        # survives node replacement (node-local counters may reset).
+        rid = EntryId(f"{via}/read", self._read_counter)
+        self.reads[rid] = {
+            "query": query,
+            "via": via,
+            "issued_at": self.sim.now,
+            "ok": None,
+            "value": None,
+            "served_index": None,
+            "completed_at": None,
+        }
+        self.dispatch(via, node.client_read(query, self.sim.now, read_id=rid))
+        return rid
+
+    def _read_completed(self, read_id, result: Dict) -> None:
+        rec = self.reads.get(read_id)
+        if rec is None or rec["completed_at"] is not None:
+            return
+        rec["ok"] = result.get("ok", False)
+        rec["value"] = result.get("value")
+        rec["served_index"] = result.get("served_index")
+        rec["completed_at"] = self.sim.now
+
+    def read_value(self, read_id: EntryId):
+        return self.reads[read_id]["value"]
+
+    def run_until_reads(self, read_ids, max_time: float = 30_000.0) -> bool:
+        def done() -> bool:
+            return all(
+                self.reads[r]["completed_at"] is not None for r in read_ids
+            )
+
+        self.sim.run_until(self.sim.now + max_time, stop=done)
+        return done()
 
     def run(self, duration: float, stop: Optional[Callable[[], bool]] = None) -> None:
         self.sim.run_until(self.sim.now + duration, stop)

@@ -69,6 +69,17 @@ class StateMachine:
     def size_bytes(self) -> int:
         raise NotImplementedError
 
+    def query(self, query: Any) -> Any:
+        """Read-only entry point for the linearizable read path.
+
+        MUST NOT mutate state and is never dedup-recorded — unlike
+        ``apply``, a query is not a log entry: it has no index, is not
+        replicated, and may be evaluated any number of times (origin-side
+        read retries re-evaluate at the then-current applied state).
+        Machines that don't support reads return None.
+        """
+        return None
+
     def applied_entries(self) -> Optional[List[Entry]]:
         """Full applied entry history, when the machine retains it.
 
@@ -112,6 +123,13 @@ class LogListMachine(StateMachine):
 
     def size_bytes(self) -> int:
         return self._bytes
+
+    def query(self, query: Any) -> Any:
+        if query == "LEN":
+            return len(self._entries)
+        if query == "LAST":
+            return self._entries[-1].command if self._entries else None
+        return None
 
     def applied_entries(self) -> Optional[List[Entry]]:
         return list(self._entries)
@@ -192,6 +210,26 @@ class KVMachine(StateMachine):
 
     def size_bytes(self) -> int:
         return self._bytes
+
+    # -- read-only query path (linearizable reads) -------------------------
+
+    def query(self, query: Any) -> Any:
+        """GET/VERSION/KEYS without going through the log. Same command
+        grammar as ``apply`` where it overlaps (``GET <key>``) so a workload
+        can switch a GET between the log path and the read path without
+        rewriting commands. Never mutates ``self._kv``."""
+        if not isinstance(query, str):
+            return None
+        parts = query.split(" ")
+        if parts[0] == "GET" and len(parts) == 2:
+            cur = self._kv.get(parts[1])
+            return cur[0] if cur is not None else None
+        if parts[0] == "VERSION" and len(parts) == 2:
+            cur = self._kv.get(parts[1])
+            return cur[1] if cur is not None else 0
+        if parts[0] == "KEYS" and len(parts) == 1:
+            return sorted(self._kv)
+        return None
 
     # -- queries (tests / benchmarks) --------------------------------------
 

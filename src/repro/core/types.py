@@ -247,12 +247,19 @@ class AppendEntriesArgs(Message):
     prev_log_term: int = 0
     entries: Tuple[Slot, ...] = ()
     leader_commit: int = 0
+    # Heartbeat-round tag for leader-lease accounting: every broadcast
+    # increments the leader's round counter and stamps its messages with it;
+    # the reply echoes the tag, so a quorum of echoes for round r proves the
+    # leader was still recognized no earlier than r's send time — the lease
+    # basis. 0 = untagged (pre-lease peers / replies to stale leaders).
+    hb_id: int = 0
 
 
 @dataclasses.dataclass
 class AppendEntriesReply(Message):
     success: bool = False
     match_index: int = 0
+    hb_id: int = 0
 
 
 @dataclasses.dataclass
@@ -359,6 +366,51 @@ class FastFinalize(Message):
     entry: Optional[Entry] = None
     leader_commit: int = 0
     window: Tuple[Entry, ...] = ()
+
+
+@dataclasses.dataclass
+class ReadIndexProbe(Message):
+    """Leader -> ALL: one leadership-confirmation round for pending
+    linearizable reads (the ReadIndex protocol). ``probe_id`` comes from the
+    same monotone round counter as AppendEntries ``hb_id``, so probe acks
+    and heartbeat acks share one quorum/lease accounting path. A follower
+    that acks a probe also resets its election timer — the promise the
+    leader-lease safety argument rests on (no new leader sooner than
+    election_timeout_min after the ack)."""
+
+    leader_id: NodeId = ""
+    probe_id: int = 0
+
+
+@dataclasses.dataclass
+class ReadIndexProbeReply(Message):
+    probe_id: int = 0
+    ok: bool = False
+
+
+@dataclasses.dataclass
+class ReadQuery(Message):
+    """Non-leader -> leader: relay a linearizable read. ``read_id`` is the
+    client-side identity (origin + seq, EntryId-shaped but NEVER entered in
+    the dedup table — reads must not be recorded as applied commands);
+    replies and origin-side retries are deduplicated on it."""
+
+    read_id: Optional[EntryId] = None
+    query: Any = None
+
+
+@dataclasses.dataclass
+class ReadReply(Message):
+    """Leader -> read origin. ``served_index`` is the leader's last_applied
+    at serve time (>= the captured read index) — what the read-oracle
+    checker validates freshness against. ``ok=False`` means "retry via
+    leader_hint" (the serving node lost leadership)."""
+
+    read_id: Optional[EntryId] = None
+    ok: bool = False
+    value: Any = None
+    served_index: int = 0
+    leader_hint: Optional[NodeId] = None
 
 
 @dataclasses.dataclass

@@ -116,6 +116,86 @@ def check_kv_converged(cluster) -> None:
     check_kv_consistency(cluster)
 
 
+def _replay_kv(value, parts):
+    """Apply one KV write command (already split) to a single key's value,
+    mirroring KVMachine semantics."""
+    op = parts[0]
+    if op == "SET" and len(parts) >= 3:
+        return " ".join(parts[2:])
+    if op == "DEL" and len(parts) == 2:
+        return None
+    if op == "CAS" and len(parts) >= 4:
+        return " ".join(parts[3:]) if value == parts[2] else value
+    return value
+
+
+def check_read_oracle(cluster, writes) -> int:
+    """Linearizability oracle for KV ``GET`` reads issued via
+    :meth:`repro.core.sim.Cluster.read`.
+
+    ``writes`` is an iterable of ``(EntryId, command)`` pairs — every KV
+    write the workload submitted (SET/DEL/CAS). For each completed read the
+    oracle checks, against the cluster's commit record (``metrics.traces``
+    carries each write's commit index and first-commit time, which stays
+    exact across compaction):
+
+    * freshness — every write to the read's key that was ACKED (observably
+      committed) strictly before the read was ISSUED has
+      ``committed_index <= served_index``: a linearizable read may never
+      miss a write the client could already know about;
+    * validity — the returned value equals the replay of ALL committed
+      writes to that key up to ``served_index`` in index order (a read must
+      return some consistent prefix state, not a value from a parallel
+      universe).
+
+    Concurrent write/read pairs (identical timestamps) are exempt from the
+    freshness check — either ordering is a valid linearization. Returns the
+    number of reads checked (completed KV GETs), so callers can assert the
+    oracle actually saw their workload.
+    """
+    committed = []
+    for eid, cmd in writes:
+        t = cluster.metrics.traces.get(eid)
+        if t is not None and t.committed:
+            parts = cmd.split(" ")
+            if len(parts) >= 2 and parts[0] in ("SET", "DEL", "CAS"):
+                committed.append(
+                    (t.committed_index, t.first_commit_at, parts)
+                )
+    committed.sort(key=lambda x: x[0])
+    n_checked = 0
+    for rid, rec in cluster.reads.items():
+        if not rec.get("ok"):
+            continue
+        q = rec.get("query")
+        if not (isinstance(q, str) and q.startswith("GET ") and len(q.split()) == 2):
+            continue
+        key = q.split(" ")[1]
+        served = rec["served_index"]
+        issued = rec["issued_at"]
+        assert served is not None, f"read {rid} completed without served_index"
+        expected = None
+        for idx, t_commit, parts in committed:
+            if parts[1] != key:
+                continue
+            if idx <= served:
+                expected = _replay_kv(expected, parts)
+            else:
+                # Not included in the served prefix: it must not have been
+                # acked before the read was issued.
+                assert t_commit >= issued, (
+                    f"STALE READ {rid}: '{q}' served at index {served} "
+                    f"missed write {' '.join(parts)} (index {idx}) acked at "
+                    f"t={t_commit} before the read was issued at t={issued}"
+                )
+        assert rec["value"] == expected, (
+            f"READ VALUE MISMATCH {rid}: '{q}' at served_index {served} "
+            f"returned {rec['value']!r}, replay says {expected!r}"
+        )
+        n_checked += 1
+    return n_checked
+
+
 def committed_acks(cluster, eids: Sequence[EntryId]) -> list:
     """The subset of ``eids`` the cluster acknowledged (committed per the
     Recorder) — i.e. the ones a client would consider durable."""

@@ -1,0 +1,388 @@
+"""Linearizable read path: ReadIndex quorum reads + leader leases.
+
+Covers the tentpole's contract end to end:
+
+- basic ReadIndex semantics (leader + follower-forwarded reads, no log
+  growth, queries never mutate or dedup-record);
+- zero-round lease reads (no probe traffic under a fresh lease);
+- the fresh-leader read barrier (lazy __noop__ commit before serving);
+- staleness under partition / leader change (a deposed leader must not
+  serve reads it can no longer prove fresh; origins fail over);
+- fast-track visibility (a fast-committed write acked before a read was
+  issued is always visible to that read);
+- lease safety under skewed + drifting clocks (chaos, zero stale reads —
+  validated by the read oracle in tests/commit_history.py);
+- pipelined chunked snapshot transfer under loss and blackout;
+- hierarchy: pod-local reads complete without any global-tier commits.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster
+from repro.core.statemachine import KVMachine
+from repro.core.hierarchy import HierarchicalCluster
+
+from commit_history import (
+    check_commit_history,
+    check_kv_consistency,
+    check_read_oracle,
+    committed_acks,
+)
+
+
+def kv_factory(nid):
+    return KVMachine()
+
+
+def _mk(n=5, protocol="fastraft", seed=1, lease=False, **kw):
+    cfg = kw.pop("config", None) or RaftConfig(
+        lease_duration_ms=800.0 if lease else 0.0,
+        clock_skew_ms=10.0 if lease else 0.0,
+    )
+    c = Cluster(n=n, protocol=protocol, seed=seed, config=cfg,
+                state_machine_factory=kv_factory, **kw)
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    return c
+
+
+# --------------------------------------------------------------- ReadIndex
+
+
+def test_readindex_basic_leader_and_follower():
+    c = _mk(seed=3)
+    lead = c.leader()
+    writes = []
+    eid = c.submit("SET a alpha", via=lead)
+    writes.append((eid, "SET a alpha"))
+    assert c.run_until_committed([eid])
+    log_len_before = c.nodes[lead].last_log_index()
+
+    r1 = c.read("GET a", via=lead)
+    follower = [n for n in c.nodes if n != lead][0]
+    r2 = c.read("GET a", via=follower)
+    assert c.run_until_reads([r1, r2], 10_000)
+    assert c.reads[r1]["value"] == "alpha"
+    assert c.reads[r2]["value"] == "alpha"
+    # Reads never ride the log.
+    assert c.nodes[lead].last_log_index() == log_len_before
+    assert c.metrics.counters.get("readindex_reads", 0) == 2
+    assert check_read_oracle(c, writes) == 2
+
+
+def test_reads_do_not_mutate_or_dedup_record():
+    c = _mk(seed=4)
+    lead = c.leader()
+    eid = c.submit("SET k v1", via=lead)
+    assert c.run_until_committed([eid])
+    node = c.nodes[lead]
+    snap_before = node.state_machine.snapshot()
+    rids = [c.read("GET k", via=lead) for _ in range(3)]
+    assert c.run_until_reads(rids, 10_000)
+    # Same value, no state change, no dedup entries for read ids.
+    assert all(c.reads[r]["value"] == "v1" for r in rids)
+    assert node.state_machine.snapshot() == snap_before
+    for r in rids:
+        assert not node.has_applied(r), "read id leaked into the dedup table"
+    # A GET through query() must not bump versions (unlike CAS/SET).
+    assert node.state_machine.version("k") == 1
+
+
+def test_read_before_any_leader_or_write():
+    """A read submitted into a leaderless cluster waits, then the fresh
+    leader commits its __noop__ barrier and serves (value: key absent)."""
+    cfg = RaftConfig()
+    c = Cluster(n=3, protocol="fastraft", seed=9, config=cfg,
+                state_machine_factory=kv_factory)
+    rid = c.read("GET nothing", via="n0")  # no leader exists yet
+    assert c.run_until_reads([rid], 20_000), c.reads[rid]
+    assert c.reads[rid]["ok"] and c.reads[rid]["value"] is None
+    assert c.metrics.counters.get("read_barrier_noops", 0) >= 1
+    # The barrier no-op rode the log exactly once per elected term.
+    assert c.metrics.counters["read_barrier_noops"] <= len(
+        c.metrics.leaders
+    ), c.metrics.counters
+
+
+def test_read_retries_under_loss():
+    c = _mk(seed=6, loss=0.15, jitter=2.0)
+    lead = c.leader()
+    writes = []
+    eid = c.submit("SET x lossy", via=lead)
+    writes.append((eid, "SET x lossy"))
+    assert c.run_until_committed([eid], 60_000)
+    follower = [n for n in c.nodes if n != lead][0]
+    rids = [c.read("GET x", via=follower) for _ in range(8)]
+    assert c.run_until_reads(rids, 60_000)
+    assert all(c.reads[r]["value"] == "lossy" for r in rids)
+    check_read_oracle(c, writes)
+
+
+# ------------------------------------------------------------------ leases
+
+
+def test_lease_reads_zero_rounds():
+    c = _mk(seed=5, lease=True)
+    lead = c.leader()
+    eid = c.submit("SET b beta", via=lead)
+    assert c.run_until_committed([eid])
+    c.run(300)  # heartbeat quorum establishes the lease
+    probes_before = c.metrics.counters.get("read_probes", 0)
+    t0 = c.sim.now
+    rids = [c.read("GET b", via=lead) for _ in range(5)]
+    assert c.run_until_reads(rids, 5_000)
+    assert all(c.reads[r]["value"] == "beta" for r in rids)
+    # Zero message rounds: served instantly, no probe traffic.
+    assert all(c.reads[r]["completed_at"] == t0 for r in rids)
+    assert c.metrics.counters.get("read_probes", 0) == probes_before
+    assert c.metrics.counters.get("lease_reads", 0) >= 5
+
+
+def test_lease_expires_without_quorum():
+    """A leader cut off from its quorum stops serving lease reads once the
+    lease runs out instead of serving unprovably-fresh state."""
+    c = _mk(seed=8, lease=True)
+    lead = c.leader()
+    eid = c.submit("SET c gamma", via=lead)
+    assert c.run_until_committed([eid])
+    c.run(300)
+    minority = [lead, [n for n in c.nodes if n != lead][0]]
+    majority = [n for n in c.nodes if n not in minority]
+    c.partition(minority, majority)
+    # Let the lease (capped at election_timeout_min=150ms) expire.
+    c.run(400)
+    rid = c.read("GET c", via=lead)
+    c.run(1_500)
+    assert c.reads[rid]["completed_at"] is None, (
+        "partitioned ex-leader served a read without quorum or lease"
+    )
+    c.heal()
+    assert c.run_until_reads([rid], 30_000)
+    assert c.reads[rid]["value"] == "gamma"
+
+
+# ------------------------------------------- partitions and leader changes
+
+
+def test_reads_fail_over_to_new_leader():
+    c = _mk(seed=11)
+    lead = c.leader()
+    writes = []
+    e1 = c.submit("SET k before", via=lead)
+    writes.append((e1, "SET k before"))
+    assert c.run_until_committed([e1])
+    # Cut the leader (with one follower) away from the majority.
+    minority = [lead, [n for n in c.nodes if n != lead][0]]
+    majority = [n for n in c.nodes if n not in minority]
+    c.partition(minority, majority)
+    rid = c.read("GET k", via=lead)  # pends: no quorum reachable
+    c.run(2_000)
+    assert c.reads[rid]["completed_at"] is None
+    new_lead = c.leader()
+    assert new_lead in majority
+    e2 = c.submit("SET k after", via=new_lead)
+    writes.append((e2, "SET k after"))
+    assert c.run_until_committed([e2], 30_000)
+    c.heal()
+    assert c.run_until_reads([rid], 30_000)
+    # Served after the old leader stepped down — by the new leader, whose
+    # state includes the newer write. Both freshness and validity hold.
+    assert c.reads[rid]["value"] == "after"
+    check_read_oracle(c, writes)
+    check_commit_history(c, committed_acks(c, [e1, e2]))
+
+
+def test_fast_track_commits_visible_to_immediate_reads():
+    """Fast-track visibility rule: the instant a fast-committed write is
+    acked, a lease read at the leader must observe it (zero-round reads are
+    the strictest case — no probe round to hide latency in)."""
+    c = _mk(seed=13, lease=True)
+    c.run(300)
+    writes = []
+    for i in range(10):
+        lead = c.leader()
+        follower = [n for n in c.nodes if n != lead][0]
+        cmd = f"SET hot v{i}"
+        eid = c.submit(cmd, via=follower)  # non-leader proposer: fast track
+        writes.append((eid, cmd))
+        assert c.run_until_committed([eid], 30_000)
+        rid = c.read("GET hot", via=lead)
+        assert c.run_until_reads([rid], 30_000)
+        assert c.reads[rid]["value"] == f"v{i}", (
+            f"read after ack of v{i} returned {c.reads[rid]['value']!r}"
+        )
+    assert c.metrics.counters.get("fast_commits", 0) > 0
+    check_read_oracle(c, writes)
+
+
+# ------------------------------------------------------ clock-skew + chaos
+
+
+def test_read_oracle_chaos_skewed_clocks_and_churn():
+    """Lease mode with skewed, drifting clocks, loss, crashes and
+    partitions: every completed read must pass the linearizability oracle
+    (zero stale reads), and the write history must stay consistent."""
+    rng = random.Random(1234)
+    cfg = RaftConfig(lease_duration_ms=500.0, clock_skew_ms=15.0)
+    c = Cluster(n=5, protocol="fastraft", seed=21, loss=0.05, jitter=2.0,
+                config=cfg, state_machine_factory=kv_factory,
+                clock_skew_ms=40.0, clock_drift=0.02)
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    writes, rids, crashed = [], [], []
+    wi = 0
+    for phase in range(8):
+        alive = [n for n, node in c.nodes.items() if node.alive]
+        for _ in range(4):
+            via = rng.choice(alive)
+            cmd = f"SET key{rng.randrange(5)} v{wi}"
+            wi += 1
+            eid = c.submit(cmd, via=via)
+            writes.append((eid, cmd))
+        c.run(rng.uniform(100, 400))
+        alive = [n for n, node in c.nodes.items() if node.alive]
+        for _ in range(4):
+            rids.append(c.read(f"GET key{rng.randrange(5)}", via=rng.choice(alive)))
+        c.run(rng.uniform(100, 400))
+        kind = phase % 4
+        if kind == 0:
+            lead = c.leader()
+            if lead is not None:
+                c.crash(lead)
+                crashed.append(lead)
+        elif kind == 1 and crashed:
+            c.restart(crashed.pop())
+        elif kind == 2:
+            nodes = list(c.nodes)
+            rng.shuffle(nodes)
+            c.partition(nodes[:2], nodes[2:])
+            c.run(rng.uniform(200, 600))
+            c.heal()
+        # kind == 3: quiet phase
+    c.heal()
+    for n in crashed:
+        c.restart(n)
+    c.run(8_000)  # settle: retries drain, stragglers commit
+    completed = [r for r in rids if c.reads[r]["completed_at"] is not None]
+    assert len(completed) >= len(rids) // 2, (
+        f"only {len(completed)}/{len(rids)} reads completed"
+    )
+    n_checked = check_read_oracle(c, writes)
+    assert n_checked == len(completed)
+    check_commit_history(c, committed_acks(c, [e for e, _ in writes]))
+    check_kv_consistency(c)
+
+
+# ----------------------------------------------- pipelined chunk transfer
+
+
+@pytest.mark.parametrize("window", [1, 4])
+def test_pipelined_chunk_transfer_loss_and_blackout(window):
+    """Windowed chunk streaming under per-packet loss, including a mid-
+    transfer blackout (crash + restart rewinds the follower cursor): the
+    replacement converges to identical state either way."""
+    cfg = RaftConfig(snapshot_chunk_bytes=600, snapshot_chunk_window=window,
+                     max_batch_entries=8)
+    c = Cluster(n=3, protocol="raft", seed=17, loss=0.25, base_latency=5.0,
+                jitter=1.0, bytes_per_ms=1500.0, mtu_bytes=700.0, config=cfg,
+                state_machine_factory=kv_factory)
+    assert c.run_until_leader(60_000) is not None
+    c.run(1000)
+    lead = c.leader()
+    victim = [n for n in c.nodes if n != lead][0]
+    c.partition([victim], [n for n in c.nodes if n != victim])
+    c.crash(victim)
+    eids = [c.submit(f"SET key{i % 7} {'x' * 60}-{i}", via=lead)
+            for i in range(48)]
+    assert c.run_until_committed(eids, 600_000)
+
+    def settled():
+        return all(
+            (not n.alive) or n.last_applied >= 48 for n in c.nodes.values()
+        )
+
+    c.sim.run_until(c.sim.now + 120_000, stop=settled)
+    assert settled()
+    for node in c.nodes.values():
+        if node.alive:
+            node.compact()
+    c.heal()
+    c.restart(victim)
+    c.run(150)   # transfer starts...
+    c.crash(victim)   # ...blackout mid-stream
+    c.run(300)
+    c.restart(victim)  # cursor legitimately rewinds; stream resumes
+
+    def caught_up():
+        return c.nodes[victim].commit_index >= 48
+
+    c.sim.run_until(c.sim.now + 300_000, stop=caught_up)
+    assert caught_up(), "victim never caught up through windowed transfer"
+    check_kv_consistency(c)
+    if window > 1:
+        assert c.metrics.counters.get("snapshot_chunks_sent", 0) > 0
+
+
+def test_pipelined_faster_than_serial_at_zero_loss():
+    """The ROADMAP gap this closes: a serial stream pays one RTT per chunk
+    even on a clean link; a window amortizes it."""
+    def catch_up_time(window):
+        cfg = RaftConfig(snapshot_chunk_bytes=1200, snapshot_chunk_window=window,
+                         max_batch_entries=8)
+        c = Cluster(n=3, protocol="raft", seed=5, loss=0.0, base_latency=5.0,
+                    jitter=1.0, bytes_per_ms=1500.0, mtu_bytes=1400.0,
+                    config=cfg)
+        assert c.run_until_leader(60_000) is not None
+        c.run(1000)
+        lead = c.leader()
+        victim = [n for n in c.nodes if n != lead][0]
+        c.partition([victim], [n for n in c.nodes if n != victim])
+        c.crash(victim)
+        eids = [c.submit("v" * 200 + f"-{i}", via=lead) for i in range(80)]
+        assert c.run_until_committed(eids, 600_000)
+        for node in c.nodes.values():
+            if node.alive:
+                node.compact()
+        t0 = c.sim.now
+        c.heal()
+        c.restart(victim)
+
+        def caught_up():
+            return c.nodes[victim].commit_index >= 80
+
+        c.sim.run_until(c.sim.now + 300_000, stop=caught_up)
+        assert caught_up()
+        return c.sim.now - t0
+
+    serial = catch_up_time(1)
+    pipelined = catch_up_time(8)
+    assert pipelined < serial, (serial, pipelined)
+
+
+# --------------------------------------------------------------- hierarchy
+
+
+def test_hierarchy_pod_local_reads_no_global_traffic():
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=3,
+                            state_machine_factory=kv_factory)
+    h.bootstrap()
+    pod = h.pod_ids[0]
+    local = h.pods[pod]
+    lead = local.leader()
+    eid = local.submit("SET pk podval", via=lead)
+    assert local.run_until_committed([eid], 30_000)
+    global_commits_before = {
+        p: n.commit_index for p, n in h.global_nodes.items()
+    }
+    rids = [h.read_pod(pod, "GET pk") for _ in range(3)]
+    assert h.run_until_pod_reads(pod, rids, 30_000)
+    assert all(local.reads[r]["value"] == "podval" for r in rids)
+    # Served entirely in-domain: the global tier committed nothing for them.
+    assert {
+        p: n.commit_index for p, n in h.global_nodes.items()
+    } == global_commits_before
+    h.check_consistency()
