@@ -138,6 +138,53 @@ def run(mode: str, via: str = "leader", protocol: str = "fastraft",
     }
 
 
+def burst_run(coalesce: bool, protocol: str = "raft", loss: float = 0.0,
+              seed: int = 13, n_rounds: int = 5, burst: int = 10) -> Dict[str, float]:
+    """Open-loop read bursts from several followers at once: measures how
+    many ReadIndexProbe quorum rounds it takes to serve a burst. With
+    ``read_coalesce_window`` > 0 the leader batches every read arriving
+    within the window behind ONE probe and groups the replies per origin
+    (etcd-style read coalescing) — probes/read collapses from ~1 toward
+    1/burst; without it each arrival fires its own probe."""
+    cfg = RaftConfig(
+        heartbeat_interval=20.0,
+        read_coalesce_window=(2 * ONE_WAY) if coalesce else 0.0,
+    )
+    c = Cluster(n=5, protocol=protocol, seed=seed, loss=loss,
+                base_latency=ONE_WAY, jitter=0.0, config=cfg,
+                state_machine_factory=lambda nid: KVMachine())
+    assert c.run_until_leader(60_000) is not None
+    c.run(1000)
+    lead = c.leader()
+    followers = [n for n in c.nodes if n != lead]
+    weid = c.submit("SET key0 v0", via=lead)
+    _await(c, lambda: (
+        c.metrics.traces.get(weid) is not None and c.metrics.traces[weid].committed
+    ))
+    p0 = c.metrics.counters.get("read_probes", 0)
+    latencies: List[float] = []
+    total = 0
+    for _ in range(n_rounds):
+        t_issue = c.sim.now
+        rids = [
+            c.read("GET key0", via=followers[i % len(followers)])
+            for i in range(burst)
+        ]
+        assert c.run_until_reads(rids)
+        latencies += [c.reads[r]["completed_at"] - t_issue for r in rids]
+        total += len(rids)
+        c.run(50.0)  # separate the bursts
+    c.check_log_consistency()
+    probes = c.metrics.counters.get("read_probes", 0) - p0
+    return {
+        "probes_per_read": probes / total,
+        "mean_read_latency_ms": sum(latencies) / len(latencies),
+        "reads": float(total),
+        "read_probes": float(probes),
+        "reply_batches": float(c.metrics.counters.get("read_reply_batches", 0)),
+    }
+
+
 def lease_speedup(protocol: str = "fastraft", seed: int = 11,
                   n_rounds: int = 10) -> Dict[str, float]:
     """Headline number: 90:10 read:write ops/sec at the leader, lease vs
@@ -198,6 +245,22 @@ def main(argv=None) -> List[Dict]:
           f"{s['lease_ops_per_sec']:.0f} ops/s)")
     assert s["speedup"] >= 2.0, s
     rows.append({"mode": "lease_speedup", "via": "leader", "loss": 0.0, **s})
+    # Read coalescing: burst workload, probes per read with and without the
+    # coalescing window (ROADMAP "read batching" item).
+    burst_rounds = 3 if args.smoke else 6
+    plain = burst_run(False, n_rounds=burst_rounds)
+    coal = burst_run(True, n_rounds=burst_rounds)
+    print("mode,probes_per_read,mean_read_latency_ms,reply_batches")
+    for mode, r in (("readindex_burst", plain), ("coalesced", coal)):
+        r.update(protocol="raft", mode=mode, via="follower", loss=0.0)
+        rows.append(r)
+        print(f"{mode},{r['probes_per_read']:.2f},"
+              f"{r['mean_read_latency_ms']:.2f},{r['reply_batches']:.0f}")
+    # One probe round must serve (most of) a coalesced burst.
+    assert coal["probes_per_read"] <= 0.5 * max(plain["probes_per_read"], 1e-9), (
+        plain["probes_per_read"], coal["probes_per_read"],
+    )
+    assert coal["reply_batches"] > 0, coal
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

@@ -62,7 +62,14 @@ class SnapshotStore:
             "members": list(snapshot.members),
             "state": snapshot.state,
             "dedup": snapshot.dedup,
+            "version": 2,
         }
+        # v2: the full ClusterConfig (voters / learners / joint old_voters)
+        # persists next to the legacy flat member list, so a host restored
+        # from the checkpoint volume rejoins with exact quorum semantics —
+        # a learner must not come back believing it is a voter.
+        if snapshot.config is not None:
+            payload["config"] = snapshot.config.to_wire()
         tmp = self._path(node_id) + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f)
@@ -70,7 +77,7 @@ class SnapshotStore:
 
     def load(self, node_id: str):
         from repro.core.statemachine import DedupTable
-        from repro.core.types import EntryId, Snapshot
+        from repro.core.types import ClusterConfig, EntryId, Snapshot
 
         path = self._path(node_id)
         if not os.path.exists(path):
@@ -89,12 +96,14 @@ class SnapshotStore:
                 if isinstance(d, dict) and "origin" in d and "seq" in d:
                     table.add(EntryId(d["origin"], d["seq"]))
             dedup = table.state()
+        cfg = payload.get("config")  # absent in v1 files: all-voter legacy
         return Snapshot(
             last_index=payload["last_index"],
             last_term=payload["last_term"],
             state=state,
             members=tuple(payload["members"]),
             dedup=dedup,
+            config=None if cfg is None else ClusterConfig.from_wire(cfg),
         )
 
     def latest_index(self, node_id: str) -> int:

@@ -69,7 +69,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Set, Tuple
 
-from repro.core.raft import Outputs, RaftNode
+from repro.core.raft import Outputs, RaftNode, is_config_command
 from repro.core.types import (
     AppendEntriesArgs,
     Entry,
@@ -136,7 +136,11 @@ class FastRaftNode(RaftNode):
         return "fast" if fast else "classic"
 
     def _non_leader_submit(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
-        if len(self.inflight) >= self.config.max_fast_inflight or self.leader_id is None:
+        if (
+            len(self.inflight) >= self.config.max_fast_inflight
+            or self.leader_id is None
+            or is_config_command(command)  # config entries are leader-appended only
+        ):
             return super()._non_leader_submit(command, entry_id, now)
         return self._fast_propose_window([(command, entry_id)], now)
 
@@ -144,6 +148,7 @@ class FastRaftNode(RaftNode):
         if (
             len(self.inflight) + len(pairs) > self.config.max_fast_inflight
             or self.leader_id is None
+            or any(is_config_command(c) for c, _ in pairs)
         ):
             return super()._non_leader_submit_batch(pairs, now)
         out: Outputs = []
@@ -239,6 +244,12 @@ class FastRaftNode(RaftNode):
         (None = refuse)."""
         if index <= self.snapshot_last_index:
             return None  # compacted: slot is committed history
+        if is_config_command(entry.command):
+            # Membership changes never ride the fast track: the entry that
+            # REDEFINES quorums must not commit through a quorum rule that
+            # is itself in flux. They are leader-appended classic entries.
+            self._count("fast_rejects")
+            return None
         authoritative = self.slot(index)
         if authoritative is not None:
             # Classic track already owns this index. Vote only if it's the
@@ -355,14 +366,19 @@ class FastRaftNode(RaftNode):
         if s is not None and s.entry.entry_id == entry_id:
             tally.entries.setdefault(entry_id, s.entry)
 
-        votes = len(tally.votes[entry_id])
-        fq = fast_quorum(self.m)
-        if votes >= fq and entry_id in tally.entries:
+        supporters = tally.votes[entry_id]
+        # Fast commit requires ceil(3V/4) of EVERY active voter set (both
+        # halves during a joint config change); learner votes never count —
+        # ClusterConfig.fast_ok intersects with the voter sets.
+        if self.cluster_config.fast_ok(supporters) and entry_id in tally.entries:
             return self._finalize_fast_slot(index, tally.entries[entry_id], now)
-        # Definitive conflict: no candidate can still reach the fast quorum.
-        total_cast = sum(len(v) for v in tally.votes.values())
-        best = max((len(v) for v in tally.votes.values()), default=0)
-        if best + (self.m - total_cast) < fq and len(tally.votes) > 1:
+        # Definitive conflict: no candidate can still reach a fast quorum
+        # in every active voter set (per-slot FCFS votes never change).
+        cast = set().union(*tally.votes.values())
+        if len(tally.votes) > 1 and not any(
+            self.cluster_config.fast_possible(v, cast)
+            for v in tally.votes.values()
+        ):
             return self._fallback_slot(index, now)
         return []
 
@@ -527,31 +543,50 @@ class FastRaftNode(RaftNode):
     def _on_leadership_acquired(self, now: float) -> Outputs:
         """Recover possibly-fast-committed entries from the election quorum.
 
-        Must-adopt entries (count >= fq + R - M in the R granted tails) are
-        re-adopted at their ORIGINAL slot index, overwriting uncommitted
-        classic entries if present (a committed conflicting classic entry at
-        the same index is impossible — see module docstring). Gaps below a
+        Must-adopt entries are re-adopted at their ORIGINAL slot index,
+        overwriting uncommitted classic entries if present (a committed
+        conflicting classic entry at the same index is impossible — see
+        module docstring). The must threshold is config-aware: an entry
+        that fast-committed holds >= fq(V) of every active voter set V, so
+        within the granted sample S_V (of V's voters) it appears at least
+        fq(V) + |S_V| - |V| times; an entry below that bound in ANY active
+        set provably did not fast-commit. During a joint config this is
+        evaluated against both halves — conservative in the safe direction
+        (over-adopting a non-committed entry just re-proposes it
+        classically; EntryId dedup keeps that idempotent). Gaps below a
         must-adopt index that cannot be filled prove the entry never
         committed, so it is appended at the next free index instead.
         """
-        replies = [r for r in self.votes_received.values() if r.vote_granted]
-        tails = [r.tentative_tail or {} for r in replies]
-        must_threshold = max(1, fast_quorum(self.m) + len(replies) - self.m)
+        granted: Dict[NodeId, dict] = {
+            n: (r.tentative_tail or {})
+            for n, r in self.votes_received.items()
+            if r.vote_granted
+        }
 
-        counts: Dict[int, Dict[EntryId, int]] = {}
+        holders: Dict[int, Dict[EntryId, set]] = {}
         entries: Dict[EntryId, Entry] = {}
-        for tail in tails:
+        for src, tail in granted.items():
             for index, (entry, _state) in tail.items():
-                counts.setdefault(index, {})
-                counts[index][entry.entry_id] = counts[index].get(entry.entry_id, 0) + 1
+                holders.setdefault(index, {}).setdefault(entry.entry_id, set()).add(src)
                 entries.setdefault(entry.entry_id, entry)
+
+        def may_have_fast_committed(holder_set: set) -> bool:
+            for vs in self.cluster_config.voter_sets():
+                s = set(vs)
+                sample = sum(1 for n in granted if n in s)
+                thr = max(1, fast_quorum(len(s)) + sample - len(s))
+                if len(holder_set & s) < thr:
+                    return False
+            return True
 
         must: List[Tuple[int, EntryId]] = []
         maybe: List[EntryId] = []
-        for index in sorted(counts):
-            ranked = sorted(counts[index].items(), key=lambda kv: (-kv[1], str(kv[0])))
-            top_eid, top_n = ranked[0]
-            if top_n >= must_threshold:
+        for index in sorted(holders):
+            ranked = sorted(
+                holders[index].items(), key=lambda kv: (-len(kv[1]), str(kv[0]))
+            )
+            top_eid, top_holders = ranked[0]
+            if may_have_fast_committed(top_holders):
                 must.append((index, top_eid))
                 ranked = ranked[1:]
             if self.readopt_uncommitted:

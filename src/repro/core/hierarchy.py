@@ -23,16 +23,73 @@ global decision through local (cheap) consensus.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.fast_raft import FastRaftNode
 from repro.core.metrics import Recorder
 from repro.core.raft import RaftConfig, RaftNode
-from repro.core.sim import Cluster, LinkModel, Simulation
+from repro.core.sim import Cluster, LinkModel, MembershipError, Simulation
 from repro.core.statemachine import LogListMachine, StateMachine
 from repro.core.types import Entry, EntryId, Message, NodeId
 
 GLOBAL_SHADOW_PREFIX = "__global__:"
+
+
+class GlobalDeliveryMachine(LogListMachine):
+    """State machine of a global-tier member: the applied global history,
+    surfacing every globally-committed entry to the hierarchy for
+    down-propagation into the member's pod.
+
+    Delivery hooks BOTH paths a global member can learn a commit through:
+    ``apply`` (normal replication) and ``restore`` (an InstallSnapshot jump
+    past compacted history — now that the global tier compacts and streams
+    chunked snapshots, a lagging member may never apply the interior
+    entries individually). Restore re-announces the full history; the
+    pod-level (index, entry_id) dedup in the hierarchy makes re-delivery
+    idempotent, so over-announcing is safe where under-announcing would
+    silently lose global commands in the skipped range."""
+
+    name = "global-delivery"
+
+    def __init__(self, on_entry: Callable[[int, Entry], None]):
+        super().__init__()
+        self._on_entry = on_entry
+
+    def apply(self, index: int, entry: Entry) -> Any:
+        r = super().apply(index, entry)
+        self._on_entry(index, entry)
+        return r
+
+    def restore(self, state: Any) -> None:
+        super().restore(state)
+        for i, e in enumerate(self._entries):
+            self._on_entry(i + 1, e)
+
+
+@dataclasses.dataclass
+class PodMove:
+    """Tracking record for one live pod rebalancing (move_node).
+
+    ``ops`` holds the underlying MembershipOps this move issued (removal
+    on the source pod, learner+promotion on the destination) — failure is
+    judged on THESE ops only, never on unrelated churn in either pod."""
+
+    nid: NodeId
+    src_pod: str
+    dst_pod: str
+    deadline: float
+    stage: str = "removing"  # removing -> joining -> done | failed
+    error: str = ""
+    ops: List = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.stage == "done"
+
+    @property
+    def failed(self) -> bool:
+        return self.stage == "failed"
 
 
 class ShadowDeliveryMachine(StateMachine):
@@ -128,24 +185,35 @@ class HierarchicalCluster:
                 state_machine_factory=self._pod_sm_factory(pod),
             )
 
-        # Global tier: one logical member per pod.
+        # Global tier: one logical member per pod. The default config
+        # compacts its log and streams catch-up snapshots in pipelined
+        # chunks: cross-domain (inter-pod) messages must stay SMALL
+        # (CD-Raft's economy argument) — a lagging pod rejoining after a
+        # partition must not pull one giant monolithic state transfer over
+        # the slow global links.
         cls = FastRaftNode if protocol == "fastraft" else RaftNode
         gcfg = global_config or RaftConfig(
             election_timeout_min=400.0,
             election_timeout_max=800.0,
             heartbeat_interval=150.0,
             fast_vote_timeout=300.0,
+            snapshot_threshold=32,
+            snapshot_chunk_bytes=4096,
+            snapshot_chunk_window=4,
         )
         self.global_nodes: Dict[str, RaftNode] = {}
         for pi, pod in enumerate(self.pod_ids):
             n = cls(pod, self.pod_ids, config=RaftConfig(**vars(gcfg)),
                     seed=seed * 104729 + pi,
-                    apply_fn=self._make_global_apply(pod))
+                    state_machine=GlobalDeliveryMachine(self._make_global_apply(pod)))
             n.metrics = self.global_metrics
             self.global_nodes[pod] = n
         for pod, n in self.global_nodes.items():
             n.start(self.sim.now)
             self._schedule_global_tick(pod)
+        # Live pod rebalancing records (move_node).
+        self._moves: List[PodMove] = []
+        self._move_poll_scheduled = False
 
     # --------------------------------------------------------- global plumbing
 
@@ -289,6 +357,98 @@ class HierarchicalCluster:
 
         self.sim.run_until(self.sim.now + max_time, stop=done)
         return done()
+
+    # ------------------------------------------------------ pod rebalancing
+
+    def move_node(
+        self, nid: NodeId, from_pod: str, to_pod: str, timeout: float = 240_000.0
+    ) -> PodMove:
+        """Live pod rebalancing: move host ``nid`` from one pod to the
+        other WITHOUT any global-tier traffic — both sides are ordinary
+        pod-local membership changes (CD-Raft's cross-domain economy: the
+        global tier never hears about host placement, only pod identities).
+
+        Three phases, each riding the same config machinery as flat
+        clusters: (1) joint-consensus removal from the source pod, (2)
+        join the destination pod as a LEARNER and catch up on its state
+        via the pipelined chunked snapshot path, (3) joint-consensus
+        promotion to voter. The move survives pod-leader churn on either
+        side (membership ops retry) and fails explicitly at ``timeout``.
+        """
+        assert from_pod in self.pods and to_pod in self.pods
+        assert nid in self.pods[from_pod].nodes, f"{nid} not in {from_pod}"
+        assert nid not in self.pods[to_pod].nodes, f"{nid} already in {to_pod}"
+        rm = self.pods[from_pod].remove_node(nid, pop=True, timeout=timeout)
+        move = PodMove(nid, from_pod, to_pod, deadline=self.sim.now + timeout,
+                       ops=[rm])
+        self._moves.append(move)
+        if not self._move_poll_scheduled:
+            self._move_poll_scheduled = True
+            self._schedule_move_poll()
+        return move
+
+    def _schedule_move_poll(self) -> None:
+        def poll():
+            for move in self._moves:
+                self._advance_move(move)
+            self._moves = [m for m in self._moves if not (m.done or m.failed)]
+            if self._moves:
+                self.sim.schedule(self.tick_interval, poll)
+            else:
+                self._move_poll_scheduled = False
+
+        self.sim.schedule(self.tick_interval, poll)
+
+    def _advance_move(self, move: PodMove) -> None:
+        src, dst = self.pods[move.src_pod], self.pods[move.dst_pod]
+        if self.sim.now >= move.deadline:
+            move.stage, move.error = "failed", f"pod move timed out in {move.stage}"
+            return
+        # Failure is judged on THIS move's own ops only — and consumed, so
+        # unrelated (or long-finished) churn in either pod can neither fail
+        # the move nor leak a stale error into later moves.
+        failed_ops = [o for o in move.ops if o.failed]
+        if failed_ops:
+            move.stage = "failed"
+            move.error = "; ".join(f"{o.kind}({o.nid}): {o.error}" for o in failed_ops)
+            for pod in (src, dst):
+                pod.membership_failures = [
+                    o for o in pod.membership_failures if o not in failed_ops
+                ]
+            return
+        if move.stage == "removing" and move.nid not in src.nodes:
+            # Removal committed and the host left the source pod: join the
+            # destination as a learner (fresh state machine from the
+            # destination's factory — it learns dst state via snapshot,
+            # carrying nothing over), then promote once caught up.
+            move.ops.append(
+                dst.add_learner(move.nid, timeout=move.deadline - self.sim.now)
+            )
+            move.ops.append(
+                dst.promote(move.nid, timeout=move.deadline - self.sim.now)
+            )
+            move.stage = "joining"
+        elif move.stage == "joining":
+            cfg = dst._committed_config()
+            if not cfg.joint and move.nid in cfg.voters:
+                move.stage = "done"
+
+    def run_until_moved(self, max_time: float = 240_000.0) -> bool:
+        """Run until every in-flight pod move completed; raises
+        :class:`repro.core.sim.MembershipError` on explicit failure."""
+
+        def done() -> bool:
+            return not self._moves
+
+        orig = list(self._moves)
+        self.sim.run_until(self.sim.now + max_time, stop=done)
+        failed = [m for m in orig if m.failed]
+        if failed:
+            raise MembershipError(
+                "; ".join(f"move({m.nid} {m.src_pod}->{m.dst_pod}): {m.error}"
+                          for m in failed)
+            )
+        return not self._moves
 
     # ----------------------------------------------------------------- chaos
 

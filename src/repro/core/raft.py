@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import json
 import random
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -32,6 +33,7 @@ from repro.core.statemachine import DedupTable, LogListMachine, StateMachine
 from repro.core.types import (
     AppendEntriesArgs,
     AppendEntriesReply,
+    ClusterConfig,
     Entry,
     EntryId,
     ForwardOperation,
@@ -62,6 +64,28 @@ CONFIG_PREFIX = "__config__:"  # membership-change commands
 NOOP_PREFIX = "__noop__:"      # read-barrier no-op (fresh leader, no
                                # current-term commit yet); state machines
                                # ignore it like other infrastructure cmds
+
+
+def config_command(cfg) -> str:
+    """Log-entry encoding of a :class:`ClusterConfig` (or, legacy, a plain
+    member list, which encodes as an all-voter simple config)."""
+    if not isinstance(cfg, ClusterConfig):
+        cfg = ClusterConfig.of(cfg)
+    return CONFIG_PREFIX + json.dumps(cfg.to_wire(), sort_keys=True)
+
+
+def parse_config_command(cmd: str) -> ClusterConfig:
+    """Decode a ``__config__:`` command. The legacy wire form is a bare
+    comma-separated member list (pre-joint-consensus single-step changes);
+    it decodes as an all-voter simple config so old logs/snapshots replay."""
+    body = cmd[len(CONFIG_PREFIX):]
+    if body.startswith("{"):
+        return ClusterConfig.from_wire(json.loads(body))
+    return ClusterConfig.of([m for m in body.split(",") if m])
+
+
+def is_config_command(command) -> bool:
+    return isinstance(command, str) and command.startswith(CONFIG_PREFIX)
 
 
 @dataclasses.dataclass
@@ -119,6 +143,13 @@ class RaftConfig:
     # Origin-side read retry interval (lost ReadQuery/ReadReply, leader
     # churn). 0 = use election_timeout_min.
     read_retry_timeout: float = 0.0
+    # Read coalescing (etcd-style): when > 0, a leader holds reads that
+    # cannot be lease-served for up to this many sim-ms and confirms the
+    # whole batch with ONE ReadIndexProbe round; replies to the same origin
+    # leave as one grouped ReadReply. 0 = one probe per read (seed
+    # behavior). Safety is unchanged — the shared probe is still sent at or
+    # after every coalesced read arrived.
+    read_coalesce_window: float = 0.0
 
 
 @dataclasses.dataclass
@@ -179,9 +210,17 @@ class RaftNode:
         seed: int = 0,
         apply_fn: Optional[Callable[[int, Entry], None]] = None,
         state_machine: Optional[StateMachine] = None,
+        cluster_config: Optional[ClusterConfig] = None,
     ):
         self.id = node_id
-        self.members: List[NodeId] = list(members)
+        # The cluster configuration, a first-class log-replicated object:
+        # every quorum decision flows through it (see ClusterConfig).
+        # ``members`` (legacy API) becomes the all-voter initial config.
+        # _config_log tracks where each active config came from —
+        # [(log index, config), ...] with the base entry at position 0 —
+        # so truncation can roll the config back (append-time adoption).
+        self.cluster_config: ClusterConfig = cluster_config or ClusterConfig.of(members)
+        self._config_log: List[Tuple[int, ClusterConfig]] = [(0, self.cluster_config)]
         self.config = config or RaftConfig()
         # crc32, NOT hash(): string hashing is randomized per process and
         # would silently break cross-process determinism of every sim.
@@ -285,15 +324,55 @@ class RaftNode:
         # Replies generated at points with no Outputs channel (e.g. reads
         # unblocked inside _advance_commit); drained by on_message/on_tick.
         self._outbox: Outputs = []
+        # Membership-change driving (leader side): set when a committed
+        # final config excludes us as a voter — we broadcast the commit
+        # once more, then step down (dissertation rule: a removed leader
+        # manages the cluster until C_new commits, not a moment longer).
+        self._pending_stepdown = False
+        # Read coalescing: deadline of the probe that will confirm the
+        # currently-buffered reads (0.0 = none scheduled).
+        self._probe_deadline = 0.0
 
     # ---------------------------------------------------------------- util
 
     @property
+    def members(self) -> List[NodeId]:
+        """All replication targets (voters of every active config +
+        learners), sorted. Read-only: membership changes flow through the
+        log as ``__config__:`` entries, never by assignment."""
+        return list(self.cluster_config.members)
+
+    @property
     def m(self) -> int:
-        return len(self.members)
+        return len(self.cluster_config.members)
 
     def quorum(self) -> int:
-        return majority(self.m)
+        """Majority of the CURRENT voter set. Debug/back-compat only: real
+        quorum decisions go through ClusterConfig (joint configs need a
+        majority of BOTH voter sets — see election_won/commit_ok)."""
+        return majority(len(self.cluster_config.voters))
+
+    def is_voter(self) -> bool:
+        return self.cluster_config.is_voter(self.id)
+
+    def committed_config(self) -> ClusterConfig:
+        """The config as of commit_index (what a membership operation
+        polls for completion)."""
+        return self._config_at(self.commit_index)
+
+    def _config_at(self, index: int) -> ClusterConfig:
+        cfg = self._config_log[0][1]
+        for i, c in self._config_log:
+            if i <= index:
+                cfg = c
+            else:
+                break
+        return cfg
+
+    def config_change_in_flight(self) -> bool:
+        """True while an appended config entry is uncommitted OR a joint
+        transition awaits its final config — the at-most-one-change rule."""
+        return self._config_log[-1][0] > self.commit_index or self.cluster_config.joint
 
     @property
     def snapshot_last_index(self) -> int:
@@ -406,6 +485,7 @@ class RaftNode:
         self._inflight = {}
         self._pipe_next = {}
         self._snap_xfer = {}
+        self._pending_stepdown = False
         self._reset_read_leadership_state()
         self._reset_election_timer(now)
 
@@ -429,6 +509,7 @@ class RaftNode:
         self._quorum_round = 0
         self._confirmed_sent_sim = -1.0e18
         self._lease_expiry_local = -1.0e18
+        self._probe_deadline = 0.0
 
     def _become_candidate(self, now: float) -> Outputs:
         self.term += 1
@@ -476,8 +557,8 @@ class RaftNode:
         return out + self._broadcast_append_entries(now)
 
     def _maybe_win_election(self, now: float) -> Outputs:
-        grants = sum(1 for r in self.votes_received.values() if r.vote_granted)
-        if self.role is Role.CANDIDATE and grants >= self.quorum():
+        granted = {n for n, r in self.votes_received.items() if r.vote_granted}
+        if self.role is Role.CANDIDATE and self.cluster_config.election_won(granted):
             return self._become_leader(now)
         return []
 
@@ -512,11 +593,27 @@ class RaftNode:
         if self.role is Role.LEADER:
             if self._batch_buffer and now >= self._batch_deadline:
                 out += self._flush_batch(now)
-            if now >= self.next_heartbeat:
+            out += self._config_tick(now)
+            if self.role is Role.LEADER and now >= self.next_heartbeat:
                 self.next_heartbeat = now + self.config.heartbeat_interval
                 out += self._broadcast_append_entries(now)
+            # Coalesced-read probe: one confirmation round for every read
+            # buffered inside the window.
+            if (
+                self.role is Role.LEADER
+                and self._probe_deadline > 0.0
+                and now >= self._probe_deadline
+            ):
+                self._probe_deadline = 0.0
+                if self._reads_pending and self.peers():
+                    out += self._send_read_probe(now)
         elif now >= self.election_deadline:
-            out += self._become_candidate(now)
+            # Learners and removed members never campaign: they are not in
+            # any voter set, so an election they start could only disrupt.
+            if self.is_voter():
+                out += self._become_candidate(now)
+            else:
+                self._reset_election_timer(now)
         out += self._tick_protocol(now)  # FastRaft hook (fast-slot timeouts)
         # Origin-side read retries: reads are idempotent, so lost
         # ReadQuery/ReadReply messages and leader churn are handled by
@@ -997,6 +1094,14 @@ class RaftNode:
         ]
 
     def _handle_ReadReply(self, msg: ReadReply, now: float) -> Outputs:
+        if msg.ok and msg.batch:
+            # Grouped reply: complete every batched read (same origin, same
+            # served state). _read_complete drops ids already completed.
+            for rid, value in msg.batch:
+                self._read_complete(
+                    rid,
+                    {"ok": True, "value": value, "served_index": msg.served_index},
+                )
         cr = self._reads_inflight.get(msg.read_id)
         if cr is None:
             return []  # completed already (duplicate serve) or unknown
@@ -1049,7 +1154,14 @@ class RaftNode:
         )
         self._reads_pending_ids.add(read_id)
         if self.peers():
-            out += self._send_read_probe(now)
+            w = self.config.read_coalesce_window
+            if w <= 0:
+                out += self._send_read_probe(now)
+            elif self._probe_deadline <= 0.0:
+                # Coalesce: every read arriving within the window shares the
+                # probe fired at the deadline (sent AFTER all of them
+                # arrived, so one quorum round confirms the whole batch).
+                self._probe_deadline = now + w
         return out
 
     def _append_term_noop(self, now: float) -> Outputs:
@@ -1107,24 +1219,35 @@ class RaftNode:
             return []
         return self._note_round_ack(msg.src, msg.probe_id, now)
 
+    def _quorum_acked_round(self) -> int:
+        """The newest round id a quorum of EVERY active voter set has
+        acked (self implicitly acks its own latest round). Joint configs
+        take the min across C_old and C_new — leadership is only confirmed
+        when both halves confirm it, exactly like elections and commits."""
+        q: Optional[int] = None
+        for vs in self.cluster_config.voter_sets():
+            rounds = sorted(
+                (
+                    self._hb_round if p == self.id else self._peer_acked_round.get(p, 0)
+                    for p in vs
+                ),
+                reverse=True,
+            )
+            need = majority(len(vs))
+            r = rounds[need - 1] if len(rounds) >= need else 0
+            q = r if q is None else min(q, r)
+        return q or 0
+
     def _note_round_ack(self, peer: NodeId, round_id: int, now: float) -> Outputs:
         """A peer echoed round ``round_id`` in the current term. When the
-        quorum-th highest acked round advances, leadership is confirmed as
-        of that round's SEND time: the lease extends from it, and pending
-        reads that arrived at or before it become servable."""
+        round every voter-set quorum has acked advances, leadership is
+        confirmed as of that round's SEND time: the lease extends from it,
+        and pending reads that arrived at or before it become servable."""
         if self.role is not Role.LEADER or round_id <= 0:
             return []
         if round_id > self._peer_acked_round.get(peer, 0):
             self._peer_acked_round[peer] = round_id
-        need = self.quorum() - 1  # self counts for the quorum
-        if need <= 0:
-            return self._serve_ready_reads(now)
-        acked = sorted(
-            (self._peer_acked_round.get(p, 0) for p in self.peers()), reverse=True
-        )
-        if len(acked) < need:
-            return []
-        q = acked[need - 1]
+        q = self._quorum_acked_round()
         if q <= self._quorum_round or q not in self._round_sent:
             return []  # no progress, or a stale echo from pruned history
         self._quorum_round = q
@@ -1150,25 +1273,56 @@ class RaftNode:
         if not self._term_barrier_ok():
             return []
         confirmed_at = self._confirmed_sent_sim
-        if not self.peers():
-            confirmed_at = now  # singleton group: self IS the quorum
-        out: Outputs = []
+        if self.cluster_config.commit_ok({self.id}):
+            confirmed_at = now  # self IS every quorum (singleton group)
+        served: List[_PendingRead] = []
         keep: List[_PendingRead] = []
         for r in self._reads_pending:
             if confirmed_at >= r.arrived_at and self.last_applied >= r.read_index:
                 self._reads_pending_ids.discard(r.read_id)
                 self._count("readindex_reads")
-                out += self._finish_read(r, now)
+                served.append(r)
             else:
                 keep.append(r)
         self._reads_pending = keep
+        # Group replies per origin: all reads released by one confirmation
+        # round to the same origin share ONE ReadReply (read coalescing's
+        # reply half); local-origin and lone-remote reads go through the
+        # same _finish_read path the lease serve uses.
+        out: Outputs = []
+        by_origin: Dict[NodeId, List[_PendingRead]] = {}
+        for r in served:
+            by_origin.setdefault("" if r.origin == self.id else r.origin, []).append(r)
+        for origin, rs in by_origin.items():
+            if origin == "" or len(rs) == 1:
+                for r in rs:
+                    out += self._finish_read(r, now)
+                continue
+            self._count("read_reply_batches")
+            pairs = [(r.read_id, self._eval_read(r)) for r in rs]
+            head_id, head_value = pairs[0]
+            out.append(
+                (
+                    origin,
+                    ReadReply(
+                        term=self.term, src=self.id, read_id=head_id, ok=True,
+                        value=head_value, served_index=self.last_applied,
+                        batch=tuple(pairs[1:]),
+                    ),
+                )
+            )
         return out
+
+    def _eval_read(self, r: _PendingRead) -> Any:
+        """Evaluate one (read-only) query against the local machine."""
+        value = self.state_machine.query(r.query)
+        self._count("reads_served")
+        return value
 
     def _finish_read(self, r: _PendingRead, now: float) -> Outputs:
         """Evaluate the (read-only) query against the local machine and
         deliver the result to the origin."""
-        value = self.state_machine.query(r.query)
-        self._count("reads_served")
+        value = self._eval_read(r)
         if r.origin in ("", self.id):
             self._read_complete(
                 r.read_id,
@@ -1236,6 +1390,11 @@ class RaftNode:
     def _append_slot(self, s: Slot) -> None:
         self.log.append(s)
         self._entry_index[s.entry.entry_id] = self.last_log_index()
+        # Configs take effect the moment they enter the log (dissertation
+        # rule): C_new's quorum constraints must bind before the entry is
+        # durable anywhere, or two disjoint majorities could elect.
+        if is_config_command(s.entry.command):
+            self._adopt_config(self.last_log_index(), parse_config_command(s.entry.command))
 
     def _truncate_from(self, index: int) -> None:
         start = index - self.snapshot_last_index
@@ -1243,6 +1402,10 @@ class RaftNode:
         for p in range(start - 1, len(self.log)):
             self._entry_index.pop(self.log[p].entry.entry_id, None)
         del self.log[start - 1 :]
+        # Roll the config back if its entry was truncated away.
+        while len(self._config_log) > 1 and self._config_log[-1][0] >= index:
+            self._config_log.pop()
+        self._set_cluster_config(self._config_log[-1][1])
 
     def _durable_prefix(self) -> int:
         """Largest index i such that slots 1..i are all non-tentative."""
@@ -1254,13 +1417,18 @@ class RaftNode:
         return i
 
     def _leader_advance_commit(self, now: float) -> Outputs:
-        # Largest N replicated on a majority with term == current term.
+        # Largest N replicated on a quorum of EVERY active voter set with
+        # term == current term. The leader counts itself only where it is a
+        # voter (a leader being removed during joint consensus commits via
+        # the other voters' matches — the dissertation's rule).
         for n in range(self.last_log_index(), self.commit_index, -1):
             s = self.slot(n)
             if s.state is SlotState.TENTATIVE or self.term_at(n) != self.term:
                 continue
-            votes = 1 + sum(1 for p in self.peers() if self.match_index.get(p, 0) >= n)
-            if votes >= self.quorum():
+            acked = {self.id} | {
+                p for p in self.peers() if self.match_index.get(p, 0) >= n
+            }
+            if self.cluster_config.commit_ok(acked):
                 self._advance_commit(n, now)
                 break
         return []
@@ -1301,14 +1469,19 @@ class RaftNode:
             # Applied ids live on in the dedup filter; drop the log mapping
             # so node memory tracks the machine's reduced state, not history.
             self._entry_index.pop(s.entry.entry_id, None)
+        cfg_at = self._config_at(upto)
         self.snapshot = Snapshot(
             last_index=upto,
             last_term=last_term,
             state=self.state_machine.snapshot(),
-            members=tuple(self.members),
+            members=tuple(cfg_at.members),
             dedup=self._dedup.state(),
+            config=cfg_at,
         )
         del self.log[:keep]
+        # Squash compacted config history into the snapshot's base entry.
+        above = [(i, c) for i, c in self._config_log if i > upto]
+        self._config_log = [(upto, cfg_at)] + above
         self._count("compactions")
         if self.snapshot_sink is not None:
             self.snapshot_sink(self.id, self.snapshot)
@@ -1325,7 +1498,7 @@ class RaftNode:
         self.commit_index = snap.last_index
         self.last_applied = snap.last_index
         self.term = max(self.term, snap.last_term)
-        self.members = sorted(snap.members)
+        self._rebuild_config_log_from(snap)
         # Floor for seq reuse from the snapshot's dedup filter; the
         # authoritative value comes from restore_hard_state (seqs burned
         # after the last compaction are not in the snapshot).
@@ -1373,7 +1546,7 @@ class RaftNode:
             s.entry.entry_id: snap.last_index + p + 1
             for p, s in enumerate(self.log)
         }
-        self.members = sorted(snap.members)
+        self._rebuild_config_log_from(snap)
         self._count("snapshots_installed")
 
     def _handle_InstallSnapshotArgs(self, msg: InstallSnapshotArgs, now: float) -> Outputs:
@@ -1575,8 +1748,8 @@ class RaftNode:
 
     def _apply(self, index: int, entry: Entry, now: float) -> None:
         cmd = entry.command
-        if isinstance(cmd, str) and cmd.startswith(CONFIG_PREFIX):
-            self._apply_config(cmd)
+        if is_config_command(cmd):
+            self._on_config_committed(index, parse_config_command(cmd), now)
         self._dedup.add(entry.entry_id)
         self.state_machine.apply(index, entry)
         if self.metrics is not None:
@@ -1586,19 +1759,135 @@ class RaftNode:
 
     # ------------------------------------------------------------ membership
 
-    def _apply_config(self, cmd: str) -> None:
-        new_members = sorted(cmd[len(CONFIG_PREFIX):].split(","))
-        self.members = new_members
+    def _set_cluster_config(self, cfg: ClusterConfig) -> None:
+        """Adopt ``cfg`` as the active config and realign leader peer
+        bookkeeping (new peers start pipelining from our log head; removed
+        peers are pruned)."""
+        if cfg == self.cluster_config:
+            return
+        self.cluster_config = cfg
         if self.role is Role.LEADER:
             for p in self.peers():
                 self.next_index.setdefault(p, self.last_log_index() + 1)
                 self.match_index.setdefault(p, 0)
             self.next_index = {p: self.next_index[p] for p in self.peers()}
             self.match_index = {p: self.match_index[p] for p in self.peers()}
+            self._inflight = {p: self._inflight.get(p, 0) for p in self.peers()}
+            self._pipe_next = {p: self._pipe_next.get(p, self.next_index[p])
+                               for p in self.peers()}
+            self._snap_xfer = {p: x for p, x in self._snap_xfer.items()
+                               if p in self.next_index}
+
+    def _adopt_config(self, index: int, cfg: ClusterConfig) -> None:
+        """A config entry entered the log at ``index`` (append-time
+        adoption). Truncation pops it back off; see _truncate_from."""
+        self._config_log.append((index, cfg))
+        self._set_cluster_config(cfg)
+        self._count("config_adoptions")
+
+    def _rebuild_config_log_from(self, snap: Snapshot) -> None:
+        """After a snapshot jump/restore: base config comes from the
+        snapshot, then any retained log suffix re-applies its config
+        entries on top."""
+        self._config_log = [(snap.last_index, snap.cluster_config())]
+        for p, s in enumerate(self.log):
+            if is_config_command(s.entry.command):
+                self._config_log.append(
+                    (snap.last_index + p + 1, parse_config_command(s.entry.command))
+                )
+        self._set_cluster_config(self._config_log[-1][1])
+
+    def _on_config_committed(self, index: int, cfg: ClusterConfig, now: float) -> None:
+        """A config entry committed. Two transitions are driven from here
+        (both deferred to _config_tick — this runs inside the apply loop):
+        a committed JOINT config is followed by its final config, and a
+        committed final config that drops this leader from the voters
+        triggers step-down."""
+        if not cfg.joint and self.role is Role.LEADER and not cfg.is_voter(self.id):
+            self._pending_stepdown = True
+
+    def _config_tick(self, now: float) -> Outputs:
+        """Leader-side membership-change driving, once per tick:
+
+        - committed final config without us -> broadcast the commit once
+          more so C_new learns it, then step down (a new election among
+          C_new follows);
+        - committed joint config -> append the final C_new config (phase
+          two of joint consensus). Idempotent across leader changes: any
+          leader that finds a committed joint config finishes it;
+        - an inherited uncommitted config entry from a prior term cannot
+          commit by counting alone (Raft section 5.4.2) -> append the
+          once-per-term barrier no-op to drag it over the line.
+        """
+        out: Outputs = []
+        if self._pending_stepdown:
+            self._pending_stepdown = False
+            out += self._broadcast_append_entries(now)
+            self._become_follower(self.term, now)
+            self._count("leader_stepdowns")
+            return out
+        cfg = self.cluster_config
+        latest_idx = self._config_log[-1][0]
+        if cfg.joint and latest_idx <= self.commit_index:
+            eid = EntryId(self.id, self.next_seq())
+            self._count("joint_finalizations")
+            out += self._append_and_replicate(
+                [(config_command(cfg.final()), eid)], now
+            )
+        elif latest_idx > self.commit_index and self.term_at(latest_idx) < self.term:
+            out += self._append_term_noop(now)
+        return out
+
+    def propose_config_change(
+        self,
+        voters: Optional[List[NodeId]] = None,
+        learners: Optional[List[NodeId]] = None,
+        now: float = 0.0,
+    ) -> Tuple[Optional[EntryId], Outputs]:
+        """Leader-only entry point for a membership change. Returns
+        ``(entry_id, outputs)`` of the appended config entry, or
+        ``(None, [])`` when refused: not leader, a change is already in
+        flight (at most ONE uncommitted config ever exists), or the change
+        is a no-op.
+
+        A voter-set change goes through joint consensus: this appends
+        C_old,new; once it commits, _config_tick appends the final C_new.
+        A learner-only change (add/remove/catch-up joiners) never alters
+        any quorum, so it ships as a single simple config entry directly.
+        Config entries bypass the client batch buffer: they must adopt at
+        append time, and the at-most-one guard counts appended entries.
+        """
+        if self.role is not Role.LEADER or not self.alive:
+            return None, []
+        if self.config_change_in_flight():
+            return None, []
+        cur = self.cluster_config
+        new_voters = tuple(sorted(set(voters if voters is not None else cur.voters)))
+        new_learners = tuple(
+            sorted(
+                set(learners if learners is not None else cur.learners)
+                - set(new_voters)
+            )
+        )
+        if not new_voters:
+            return None, []
+        if new_voters == cur.voters and new_learners == cur.learners:
+            return None, []
+        if new_voters != cur.voters:
+            cfg = ClusterConfig(
+                voters=new_voters, learners=new_learners, old_voters=cur.voters
+            )
+            self._count("joint_changes_started")
+        else:
+            cfg = ClusterConfig(voters=new_voters, learners=new_learners)
+            self._count("learner_changes")
+        eid = EntryId(self.id, self.next_seq())
+        return eid, self._append_and_replicate([(config_command(cfg), eid)], now)
 
     @staticmethod
     def config_command(members: List[NodeId]) -> str:
-        return CONFIG_PREFIX + ",".join(sorted(members))
+        """Legacy helper: an all-voter simple config command."""
+        return config_command(ClusterConfig.of(members))
 
     # --------------------------------------------------------------- debug
 
@@ -1680,6 +1969,8 @@ class RaftNode:
         self._lease_expiry_local = -1.0e18
         self._last_leader_contact = -1.0e18
         self._outbox = []
+        self._pending_stepdown = False
+        self._probe_deadline = 0.0
         if self.snapshot is not None:
             self.state_machine.restore(copy.deepcopy(self.snapshot.state))
             self._dedup = DedupTable.from_state(self.snapshot.dedup)

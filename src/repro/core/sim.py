@@ -16,6 +16,7 @@ Model:
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import math
@@ -29,6 +30,7 @@ from repro.core.fast_raft import FastRaftNode
 from repro.core.statemachine import StateMachine
 from repro.core.types import (
     AppendEntriesArgs,
+    ClusterConfig,
     EntryId,
     FastFinalize,
     FastPropose,
@@ -40,6 +42,44 @@ from repro.core.types import (
     ReadQuery,
     ReadReply,
 )
+
+
+class MembershipError(RuntimeError):
+    """A membership operation failed explicitly (timed out waiting for a
+    leader, for learner catch-up, or for its config change to commit)."""
+
+
+@dataclasses.dataclass
+class MembershipOp:
+    """One queued membership operation. Ops are serialized per cluster (the
+    at-most-one-config-change rule makes concurrent ops pointless) and are
+    retried automatically: a proposal lost to leader churn is re-proposed
+    against the new leader until the op's ``deadline`` — after which the op
+    FAILS explicitly (surfaced by :meth:`Cluster.run_until_membership`)
+    instead of silently doing nothing.
+
+    kind: "learner"  — add ``nid`` as a non-voting learner
+          "promote"  — promote caught-up learner ``nid`` to voter (joint)
+          "remove"   — remove ``nid`` from voters+learners (joint)
+          "swap"     — atomically replace voter ``nid`` with caught-up
+                       learner ``new`` (one joint change)
+    """
+
+    kind: str
+    nid: NodeId
+    new: NodeId = ""
+    deadline: float = 0.0
+    pop: bool = False  # drop the removed node object from the cluster dict
+    state: str = "queued"  # queued -> done | failed
+    error: str = ""
+
+    @property
+    def done(self) -> bool:
+        return self.state == "done"
+
+    @property
+    def failed(self) -> bool:
+        return self.state == "failed"
 
 # Rough fixed per-message framing cost (headers, term/id fields) for the
 # size-aware network model; only relative sizes matter.
@@ -76,7 +116,11 @@ def wire_size(msg: Message) -> int:
     if isinstance(msg, ReadQuery):
         return _MSG_BASE_BYTES + len(str(msg.query))
     if isinstance(msg, ReadReply):
-        return _MSG_BASE_BYTES + len(str(msg.value))
+        return (
+            _MSG_BASE_BYTES
+            + len(str(msg.value))
+            + sum(8 + len(str(v)) for _, v in msg.batch)
+        )
     return _MSG_BASE_BYTES
 
 
@@ -217,6 +261,10 @@ class Cluster:
         # completed through the nodes' read_done_fn.
         self.reads: Dict[EntryId, Dict] = {}
         self._read_counter = 0
+        # Membership operation queue (serialized; see MembershipOp).
+        self._mops: List[MembershipOp] = []
+        self._mop_poll_scheduled = False
+        self.membership_failures: List[MembershipOp] = []
 
         ids = [f"{node_prefix}{i}" for i in range(n)]
         self.nodes: Dict[NodeId, RaftNode] = {}
@@ -226,7 +274,9 @@ class Cluster:
             node.start(self.sim.now)
             self._schedule_tick(node.id)
 
-    def _make_node(self, nid: NodeId, members, seed: int) -> RaftNode:
+    def _make_node(
+        self, nid: NodeId, members, seed: int, cluster_config=None
+    ) -> RaftNode:
         """Construct a node wired exactly like the initial fleet: metrics,
         a fresh state machine from the factory, and — when a snapshot store
         is configured — the persistence sinks (joiners and replacements must
@@ -238,7 +288,7 @@ class Cluster:
             else None
         )
         node = cls(nid, list(members), config=RaftConfig(**vars(self.config)),
-                   seed=seed, state_machine=sm)
+                   seed=seed, state_machine=sm, cluster_config=cluster_config)
         node.metrics = self.metrics
         node.read_done_fn = self._read_completed
         if self.clock_skew_ms > 0 or self.clock_drift > 0:
@@ -413,7 +463,8 @@ class Cluster:
                 + zlib.crc32(nid.encode()) * 31
                 + self._replacements[nid]
             ) % 2**31
-        node = self._make_node(nid, old.members, seed)
+        node = self._make_node(nid, old.members, seed,
+                               cluster_config=old.cluster_config)
         snap = self.snapshot_store.load(nid)
         if snap is not None:
             node.restore_snapshot(snap)
@@ -496,28 +547,213 @@ class Cluster:
             # checking per-run monotonicity only when no restart happened.
 
     # --------------------------------------------------------- membership
+    #
+    # All membership changes flow through ClusterConfig entries in the
+    # replicated log: learner additions are simple (non-quorum-changing)
+    # config entries; every voter-set change goes through joint consensus
+    # (C_old,new then C_new — see repro.core.raft.propose_config_change).
+    # The single-step instant-voter path is gone. Ops queue, retry across
+    # leader churn, and fail EXPLICITLY at their deadline.
 
-    def add_node(self, nid: NodeId, seed: int = 9999) -> None:
-        """Bring up a fresh node and commit a membership change through the
-        current leader (single-server change). The joiner is wired exactly
-        like founding nodes — including the snapshot/hard-state persistence
-        sinks when a store is configured, so it does not silently stop
-        persisting."""
-        lead = self.leader()
-        assert lead is not None, "need a leader to change membership"
-        members = sorted(set(self.nodes[lead].members) | {nid})
-        node = self._make_node(nid, members, seed)
-        node.start(self.sim.now)
-        self.nodes[nid] = node
-        self._schedule_tick(nid)
-        cmd = RaftNode.config_command(members)
-        eid = EntryId(lead, self.nodes[lead].next_seq())
-        self.dispatch(lead, self.nodes[lead].client_request(cmd, self.sim.now, entry_id=eid))
+    def _joiner_seed(self, nid: NodeId) -> int:
+        return (zlib.crc32(nid.encode()) ^ (self.seed * 7919 + 97)) % 2**31
 
-    def remove_node(self, nid: NodeId) -> None:
+    def _live_config(self) -> ClusterConfig:
         lead = self.leader()
-        assert lead is not None and lead != nid
-        members = sorted(set(self.nodes[lead].members) - {nid})
-        cmd = RaftNode.config_command(members)
-        eid = EntryId(lead, self.nodes[lead].next_seq())
-        self.dispatch(lead, self.nodes[lead].client_request(cmd, self.sim.now, entry_id=eid))
+        if lead is not None:
+            return self.nodes[lead].cluster_config
+        best = max(
+            (n for n in self.nodes.values()),
+            key=lambda n: (n.alive, n.commit_index, n.term),
+        )
+        return best.cluster_config
+
+    def _committed_config(self) -> ClusterConfig:
+        """Best committed view across live nodes — what membership ops
+        poll for completion (survives the proposing leader stepping down)."""
+        best = max(
+            (n for n in self.nodes.values() if n.alive),
+            key=lambda n: n.commit_index,
+            default=None,
+        )
+        if best is None:
+            return self._live_config()
+        return best.committed_config()
+
+    def add_learner(
+        self, nid: NodeId, seed: Optional[int] = None, timeout: float = 60_000.0
+    ) -> MembershipOp:
+        """Bring up ``nid`` as a non-voting learner: it receives full
+        replication (including pipelined chunked snapshots) but counts
+        toward no quorum until promoted. The joiner is wired exactly like
+        founding nodes — persistence sinks included."""
+        if nid not in self.nodes:
+            cfg = self._live_config()
+            init = ClusterConfig.of(cfg.voters, set(cfg.learners) | {nid})
+            node = self._make_node(
+                nid,
+                sorted(set(cfg.members) | {nid}),
+                self._joiner_seed(nid) if seed is None else seed,
+                cluster_config=init,
+            )
+            node.start(self.sim.now)
+            self.nodes[nid] = node
+            self._schedule_tick(nid)
+        return self._enqueue_mop(
+            MembershipOp("learner", nid, deadline=self.sim.now + timeout)
+        )
+
+    def promote(self, nid: NodeId, timeout: float = 60_000.0) -> MembershipOp:
+        """Promote learner ``nid`` to voter, once caught up, through joint
+        consensus."""
+        return self._enqueue_mop(
+            MembershipOp("promote", nid, deadline=self.sim.now + timeout)
+        )
+
+    def remove_node(
+        self, nid: NodeId, pop: bool = False, timeout: float = 60_000.0
+    ) -> MembershipOp:
+        """Remove ``nid`` (voter or learner) through joint consensus. Once
+        the final config commits the node is crashed (the pod is killed);
+        ``pop=True`` also drops it from ``self.nodes`` (host physically
+        leaves — used by hierarchy pod rebalancing)."""
+        return self._enqueue_mop(
+            MembershipOp("remove", nid, pop=pop, deadline=self.sim.now + timeout)
+        )
+
+    def replace_node(
+        self,
+        old: NodeId,
+        new: NodeId,
+        seed: Optional[int] = None,
+        timeout: float = 120_000.0,
+    ) -> List[MembershipOp]:
+        """Replace voter ``old`` with fresh host ``new``: ``new`` joins as
+        a learner, catches up via the pipelined chunked snapshot path, and
+        one joint config change then swaps it in as ``old`` leaves — the
+        leader itself may be ``old`` (it steps down after C_new commits)."""
+        op1 = self.add_learner(new, seed=seed, timeout=timeout)
+        op2 = self._enqueue_mop(
+            MembershipOp("swap", old, new=new, deadline=self.sim.now + timeout)
+        )
+        return [op1, op2]
+
+    def add_node(self, nid: NodeId, seed: int = 9999) -> MembershipOp:
+        """Legacy convenience: learner catch-up then promotion (the
+        single-step instant-voter join no longer exists)."""
+        self.add_learner(nid, seed=seed)
+        return self.promote(nid)
+
+    def run_until_membership(
+        self, max_time: float = 120_000.0, raise_on_failure: bool = True
+    ) -> bool:
+        """Run until every queued membership op completed. Raises
+        :class:`MembershipError` if any op failed (explicitly surfaced —
+        never silently dropped)."""
+        self.sim.run_until(self.sim.now + max_time, stop=lambda: not self._mops)
+        if raise_on_failure and self.membership_failures:
+            fails, self.membership_failures = self.membership_failures, []
+            raise MembershipError(
+                "; ".join(f"{o.kind}({o.nid}): {o.error}" for o in fails)
+            )
+        return not self._mops
+
+    # -- op queue driving ---------------------------------------------------
+
+    def _enqueue_mop(self, op: MembershipOp) -> MembershipOp:
+        self._mops.append(op)
+        if not self._mop_poll_scheduled:
+            self._mop_poll_scheduled = True
+            self._schedule_mop_poll()
+        return op
+
+    def _schedule_mop_poll(self) -> None:
+        def poll():
+            self._membership_poll()
+            if self._mops:
+                self.sim.schedule(self.tick_interval, poll)
+            else:
+                self._mop_poll_scheduled = False
+
+        self.sim.schedule(self.tick_interval, poll)
+
+    def _membership_poll(self) -> None:
+        while self._mops:
+            op = self._mops[0]
+            if self.sim.now >= op.deadline:
+                op.state = "failed"
+                op.error = op.error or (
+                    f"timed out waiting for {op.kind}({op.nid}) "
+                    f"[leader={self.leader()}]"
+                )
+                self.membership_failures.append(op)
+                self._mops.pop(0)
+                continue
+            if not self._advance_mop(op):
+                return
+            op.state = "done"
+            self._mops.pop(0)
+
+    def _learner_caught_up(self, lead: RaftNode, nid: NodeId) -> bool:
+        match = lead.match_index.get(nid, 0)
+        return match >= lead.commit_index or lead.last_log_index() - match <= 2
+
+    def _advance_mop(self, op: MembershipOp) -> bool:
+        """One scheduling step for the head op; True once it completed."""
+        committed = self._committed_config()
+        in_transition = committed.joint
+        if op.kind == "learner" and op.nid in committed.members:
+            return True
+        if (
+            op.kind == "promote"
+            and not in_transition
+            and op.nid in committed.voters
+        ):
+            return True
+        if op.kind in ("remove", "swap"):
+            gone = not in_transition and op.nid not in committed.members
+            swapped = op.kind == "remove" or op.new in committed.voters
+            if gone and swapped:
+                node = self.nodes.get(op.nid)
+                if node is not None and node.alive:
+                    node.crash()  # the removed pod is killed
+                if op.pop:
+                    self.nodes.pop(op.nid, None)
+                return True
+        lead_id = self.leader()
+        if lead_id is None:
+            return False
+        lead = self.nodes[lead_id]
+        cur = lead.cluster_config
+        if op.kind == "learner":
+            eid, out = lead.propose_config_change(
+                learners=sorted(set(cur.learners) | {op.nid}), now=self.sim.now
+            )
+        elif op.kind == "promote":
+            if op.nid not in cur.members or not self._learner_caught_up(lead, op.nid):
+                return False
+            eid, out = lead.propose_config_change(
+                voters=sorted(set(cur.voters) | {op.nid}), now=self.sim.now
+            )
+        elif op.kind == "remove":
+            eid, out = lead.propose_config_change(
+                voters=sorted(set(cur.voters) - {op.nid}),
+                learners=sorted(set(cur.learners) - {op.nid}),
+                now=self.sim.now,
+            )
+        elif op.kind == "swap":
+            if op.new not in cur.members or not self._learner_caught_up(lead, op.new):
+                return False
+            eid, out = lead.propose_config_change(
+                voters=sorted((set(cur.voters) - {op.nid}) | {op.new}),
+                learners=sorted(set(cur.learners) - {op.new, op.nid}),
+                now=self.sim.now,
+            )
+        else:  # pragma: no cover - unknown kind
+            op.error = f"unknown membership op kind {op.kind!r}"
+            return False
+        # A refused proposal (change in flight / joint transition still
+        # finishing) simply retries at the next poll; a lost proposal is
+        # re-proposed against whichever leader emerges.
+        self.dispatch(lead_id, out)
+        return False

@@ -21,7 +21,7 @@ import dataclasses
 import enum
 import json
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterable, Optional, Set, Tuple
 
 NodeId = str
 
@@ -47,6 +47,134 @@ def recovery_threshold(m: int) -> int:
     2 * recovery_threshold(m) > majority(m) for all m >= 3.
     """
     return fast_quorum(m) + majority(m) - m
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """First-class, log-replicated cluster configuration.
+
+    Every quorum decision in the system — leader elections, commit
+    advancement, ReadIndex/lease confirmation rounds, and the fast track's
+    ceil(3V/4) acceptor quorum — flows through this object rather than raw
+    ``len(members)`` math, which is what makes membership changes safe:
+
+    - ``voters`` is the (target) voting set C_new. ``learners`` are
+      non-voting members: they receive full replication traffic (log
+      batches, snapshots) so they can catch up, but never count toward any
+      quorum and never campaign.
+    - During a **joint consensus** change (Raft dissertation chapter 4),
+      ``old_voters`` holds C_old and every quorum must be reached in BOTH
+      voter sets independently. A config with ``old_voters is None`` is a
+      simple (final) config. The joint config is itself a log entry; once
+      it commits, the leader appends the final C_new config, and only when
+      THAT commits is the transition done.
+
+    A config takes effect the moment it is appended to a node's log (not
+    when it commits) and rolls back if the entry is truncated — the
+    dissertation's rule, required so C_new's quorum constraints bind
+    before the change is durable anywhere.
+
+    Instances are frozen and canonical (sorted, deduplicated): construct
+    through :meth:`of` / :meth:`from_wire`.
+    """
+
+    voters: Tuple[NodeId, ...]
+    learners: Tuple[NodeId, ...] = ()
+    old_voters: Optional[Tuple[NodeId, ...]] = None
+
+    @staticmethod
+    def of(
+        voters: Iterable[NodeId],
+        learners: Iterable[NodeId] = (),
+        old_voters: Optional[Iterable[NodeId]] = None,
+    ) -> "ClusterConfig":
+        v = tuple(sorted(set(voters)))
+        return ClusterConfig(
+            voters=v,
+            learners=tuple(sorted(set(learners) - set(v))),
+            old_voters=None if old_voters is None else tuple(sorted(set(old_voters))),
+        )
+
+    @property
+    def joint(self) -> bool:
+        return self.old_voters is not None
+
+    def voter_sets(self) -> Tuple[Tuple[NodeId, ...], ...]:
+        """The independent voter sets a quorum must be reached in: one for
+        a simple config, both C_old and C_new during joint consensus."""
+        if self.old_voters is None:
+            return (self.voters,)
+        return (self.voters, self.old_voters)
+
+    @property
+    def members(self) -> Tuple[NodeId, ...]:
+        """Everyone who receives replication traffic: voters of every
+        active config plus learners. Cached — this backs the hot
+        RaftNode.members/peers()/m paths evaluated on every message
+        round, and the instance is frozen."""
+        cached = getattr(self, "_members_cache", None)
+        if cached is None:
+            all_ids: Set[NodeId] = set(self.voters) | set(self.learners)
+            if self.old_voters is not None:
+                all_ids |= set(self.old_voters)
+            cached = tuple(sorted(all_ids))
+            object.__setattr__(self, "_members_cache", cached)
+        return cached
+
+    def is_voter(self, nid: NodeId) -> bool:
+        return any(nid in vs for vs in self.voter_sets())
+
+    def is_learner(self, nid: NodeId) -> bool:
+        return nid in self.learners and not self.is_voter(nid)
+
+    def election_won(self, granted: Set[NodeId]) -> bool:
+        """True iff ``granted`` contains a majority of EVERY active voter
+        set (both halves of a joint config must elect)."""
+        return all(
+            len(granted & set(vs)) >= majority(len(vs)) for vs in self.voter_sets()
+        )
+
+    # Commit quorum is the same predicate; the alias keeps call sites
+    # self-documenting.
+    commit_ok = election_won
+
+    def fast_ok(self, voted: Set[NodeId]) -> bool:
+        """Fast-track finalization quorum: ceil(3V/4) of every active
+        voter set must have voted for the same entry."""
+        return all(
+            len(voted & set(vs)) >= fast_quorum(len(vs)) for vs in self.voter_sets()
+        )
+
+    def fast_possible(self, supporters: Set[NodeId], cast: Set[NodeId]) -> bool:
+        """Could ``supporters`` still grow to a fast quorum in every voter
+        set, given that ``cast`` have already voted (per-slot FCFS: a cast
+        vote is never changed)?"""
+        for vs in self.voter_sets():
+            s = set(vs)
+            if len(supporters & s) + len(s - cast) < fast_quorum(len(s)):
+                return False
+        return True
+
+    def final(self) -> "ClusterConfig":
+        """The simple config that ends this joint transition."""
+        return ClusterConfig.of(self.voters, self.learners)
+
+    def to_wire(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "voters": list(self.voters),
+            "learners": list(self.learners),
+        }
+        if self.old_voters is not None:
+            d["old_voters"] = list(self.old_voters)
+        return d
+
+    @staticmethod
+    def from_wire(d: Dict[str, Any]) -> "ClusterConfig":
+        return ClusterConfig.of(
+            d.get("voters", ()),
+            d.get("learners", ()),
+            d.get("old_voters"),
+        )
 
 
 class Role(enum.Enum):
@@ -131,9 +259,11 @@ class Snapshot:
     never interprets it, it only ships and persists it. ``dedup`` is the
     compact client-retry filter (:class:`repro.core.statemachine.
     DedupTable` state) that keeps EntryId dedup exact across compaction now
-    that entries no longer ride in the snapshot. ``members`` is the cluster
-    config as of ``last_index`` so a follower restored from scratch learns
-    membership too. Both ``state`` and ``dedup`` must be JSON-serializable
+    that entries no longer ride in the snapshot. ``config`` is the full
+    :class:`ClusterConfig` as of ``last_index`` (wire format v2) so a
+    follower restored from scratch learns voters/learners/joint state too;
+    ``members`` stays as the flat member list for v1 readers and debug
+    tooling. Both ``state`` and ``dedup`` must be JSON-serializable
     (:func:`snapshot_to_bytes` is the wire/persistence format).
     """
 
@@ -142,6 +272,15 @@ class Snapshot:
     state: Any = None
     members: Tuple[NodeId, ...] = ()
     dedup: Any = None
+    config: Optional[ClusterConfig] = None
+
+    def cluster_config(self) -> ClusterConfig:
+        """The config this snapshot pins, with the v1 legacy-load path:
+        old snapshots carry only the flat member list, which decodes as an
+        all-voter simple config (exactly what v1 semantics were)."""
+        if self.config is not None:
+            return self.config
+        return ClusterConfig.of(self.members)
 
     @property
     def entries(self) -> Tuple[Entry, ...]:
@@ -175,6 +314,7 @@ class Snapshot:
             copy.deepcopy(self.state),
             tuple(self.members),
             copy.deepcopy(self.dedup),
+            self.config,  # frozen, safe to share
         )
         size = getattr(self, "_wire_bytes", None)
         if size is not None:
@@ -187,27 +327,35 @@ def snapshot_to_bytes(snap: Snapshot) -> bytes:
     InstallSnapshot protocol streams and the SnapshotStore persists.
     ``sort_keys`` makes the byte stream identical across leaders holding
     the same (deterministic) applied state, so a transfer can survive a
-    leader change without splicing mismatched bytes."""
-    return json.dumps(
-        {
-            "last_index": snap.last_index,
-            "last_term": snap.last_term,
-            "members": list(snap.members),
-            "state": snap.state,
-            "dedup": snap.dedup,
-        },
-        sort_keys=True,
-    ).encode("utf-8")
+    leader change without splicing mismatched bytes.
+
+    Wire format v2: adds ``config`` (the full ClusterConfig — voters,
+    learners, joint old_voters) next to the legacy flat ``members`` list.
+    v1 payloads (no ``config``/``version`` keys) still load: the member
+    list decodes as an all-voter simple config."""
+    payload = {
+        "last_index": snap.last_index,
+        "last_term": snap.last_term,
+        "members": list(snap.members),
+        "state": snap.state,
+        "dedup": snap.dedup,
+        "version": 2,
+    }
+    if snap.config is not None:
+        payload["config"] = snap.config.to_wire()
+    return json.dumps(payload, sort_keys=True).encode("utf-8")
 
 
 def snapshot_from_bytes(data: bytes) -> Snapshot:
     payload = json.loads(data.decode("utf-8"))
+    cfg = payload.get("config")
     return Snapshot(
         last_index=payload["last_index"],
         last_term=payload["last_term"],
         state=payload["state"],
         members=tuple(payload["members"]),
         dedup=payload.get("dedup"),
+        config=None if cfg is None else ClusterConfig.from_wire(cfg),
     )
 
 
@@ -404,13 +552,20 @@ class ReadReply(Message):
     """Leader -> read origin. ``served_index`` is the leader's last_applied
     at serve time (>= the captured read index) — what the read-oracle
     checker validates freshness against. ``ok=False`` means "retry via
-    leader_hint" (the serving node lost leadership)."""
+    leader_hint" (the serving node lost leadership).
+
+    ``batch`` carries additional ``(read_id, value)`` pairs served to the
+    same origin in the same confirmation round (read coalescing groups all
+    reads released together into ONE reply per origin; ``served_index``
+    is shared — every batched read was served from the same applied
+    state)."""
 
     read_id: Optional[EntryId] = None
     ok: bool = False
     value: Any = None
     served_index: int = 0
     leader_hint: Optional[NodeId] = None
+    batch: Tuple = ()  # Tuple[Tuple[EntryId, Any], ...]
 
 
 @dataclasses.dataclass

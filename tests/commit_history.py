@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import Iterable, Sequence
 
+from repro.core.raft import is_config_command, parse_config_command
 from repro.core.types import EntryId
 
 
@@ -193,6 +194,88 @@ def check_read_oracle(cluster, writes) -> int:
             f"returned {rec['value']!r}, replay says {expected!r}"
         )
         n_checked += 1
+    return n_checked
+
+
+def check_config_oracle(cluster) -> int:
+    """Safety oracle for membership changes. Validates, over the committed
+    history and the cluster's live state:
+
+    * joint-consensus discipline — every committed change to the VOTER set
+      goes through a joint config first: a committed simple config either
+      repeats the previous voter set (learner-only change) or finalizes
+      the immediately preceding joint config; a committed joint config's
+      C_old equals the previous committed voter set, and no second joint
+      config commits before the first finalizes;
+    * at most one config change in flight — the current leader's log never
+      holds more than one config entry above its commit index, and never a
+      new change while its active config is still joint;
+    * election safety across C_old/C_new — at most one leader was ever
+      elected per term (the Recorder enforces this online and raises at
+      violation time; re-checked here so a swallowed exception cannot hide
+      it). Two concurrent leaders across the halves of a config change
+      would need two leaders in one term or a quorum-less election, both
+      of which this catches.
+
+    Returns the number of committed config entries checked so callers can
+    assert the oracle saw their churn. Works with any node whose machine
+    enumerates history (the default LogListMachine does)."""
+    best = max(
+        cluster.nodes.values(), key=lambda n: len(n.committed_entries()), default=None
+    )
+    n_checked = 0
+    if best is not None:
+        configs = []
+        for index, e in sorted(best.committed_by_index().items()):
+            if is_config_command(e.command):
+                configs.append((index, parse_config_command(e.command)))
+        prev_voters = None  # unknown before the first committed config
+        prev_joint = None
+        for index, cfg in configs:
+            n_checked += 1
+            if cfg.joint:
+                assert prev_joint is None, (
+                    f"config at {index}: joint config committed while joint "
+                    f"{prev_joint} had not finalized"
+                )
+                if prev_voters is not None:
+                    assert set(cfg.old_voters) == prev_voters, (
+                        f"config at {index}: C_old {cfg.old_voters} does not match "
+                        f"previous committed voters {sorted(prev_voters)}"
+                    )
+                prev_joint = cfg
+                prev_voters = set(cfg.old_voters)
+            else:
+                if prev_joint is not None:
+                    assert set(cfg.voters) == set(prev_joint.voters), (
+                        f"config at {index}: final voters {cfg.voters} do not "
+                        f"finalize joint target {prev_joint.voters}"
+                    )
+                elif prev_voters is not None:
+                    assert set(cfg.voters) == prev_voters, (
+                        f"config at {index}: voter set changed "
+                        f"{sorted(prev_voters)} -> {cfg.voters} without joint "
+                        f"consensus"
+                    )
+                prev_joint = None
+                prev_voters = set(cfg.voters)
+
+    lead = cluster.leader()
+    if lead is not None:
+        node = cluster.nodes[lead]
+        uncommitted = sum(
+            1
+            for s in node.log[max(0, node.commit_index - node.snapshot_last_index):]
+            if is_config_command(s.entry.command)
+        )
+        assert uncommitted <= 1, (
+            f"leader {lead} has {uncommitted} config entries in flight"
+        )
+
+    for term, leaders in cluster.metrics.leaders.items():
+        assert len(leaders) <= 1, (
+            f"two leaders elected in term {term}: {sorted(leaders)}"
+        )
     return n_checked
 
 

@@ -10,7 +10,7 @@
 """
 import pytest
 
-from benchmarks import latency_vs_loss, rounds_to_commit, throughput
+from benchmarks import latency_vs_loss, membership_churn, rounds_to_commit, throughput
 
 
 def test_fig1_fastraft_wins_at_low_loss():
@@ -66,6 +66,17 @@ def test_rounds_per_op_amortized_by_batching():
     single = rounds_to_commit.measure("fastraft", via_leader=False, batch_size=1)
     batched = rounds_to_commit.measure("fastraft", via_leader=False, batch_size=8)
     assert batched == pytest.approx(single)  # same rounds per batch
+
+
+def test_membership_churn_replace_leader_dip_bounded():
+    """Acceptance: replacing the leader itself (learner join + joint swap
+    + step-down + re-election) costs less than 2 election timeouts of
+    availability at loss=0, with zero acked-commit loss (the scenario
+    asserts the commit-history and config oracles internally)."""
+    r = membership_churn.run_scenario("replace_leader", loss=0.0,
+                                      steady_ops=6, churn_ops=15)
+    assert r["gap_timeouts"] < 2.0, r
+    assert r["config_entries"] >= 3  # learner add, joint, final
 
 
 def test_throughput_conflict_regime_falls_back_but_commits():

@@ -1,0 +1,342 @@
+"""Membership-churn chaos tests: joint consensus, learners, rebalancing.
+
+Every scenario runs the config-change oracle (`check_config_oracle`) on top
+of the standard commit-history checks: at most one config change in flight,
+voter-set changes only through joint consensus, election safety held across
+C_old/C_new, and zero acked-commit loss through every reconfiguration.
+"""
+
+import pytest
+
+from repro.core.hierarchy import HierarchicalCluster
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster, MembershipError
+from repro.core.types import Role
+
+from commit_history import (
+    check_commit_history,
+    check_config_oracle,
+    committed_acks,
+)
+
+
+def _drip(cluster, via, prefix, n, every=150.0):
+    """Submit n commands one at a time with sim-time gaps — a continuous
+    client load that keeps flowing THROUGH the reconfiguration."""
+    eids = []
+    for i in range(n):
+        eids.append(cluster.submit(f"{prefix}{i}", via=via))
+        cluster.run(every)
+    return eids
+
+
+# ---------------------------------------------------------------- learners
+
+
+def test_learner_is_nonvoting_and_never_campaigns():
+    c = Cluster(n=3, protocol="raft", seed=101)
+    lead = c.run_until_leader()
+    assert lead is not None
+    c.add_learner("n3")
+    assert c.run_until_membership()
+    # The learner receives replication but counts toward no quorum: cut it
+    # off entirely and the 3 voters keep committing at majority 2.
+    c.partition(["n3"], [n for n in c.nodes if n != "n3"])
+    eids = [c.submit(f"a{i}", via=c.leader()) for i in range(5)]
+    assert c.run_until_committed(eids)
+    # A partitioned VOTER would long since have started elections; the
+    # learner must not (its term would have climbed).
+    c.run(5000)
+    assert c.nodes["n3"].role is Role.FOLLOWER
+    assert c.nodes["n3"].term <= c.nodes[lead].term
+    c.heal()
+    c.run(3000)
+    check_commit_history(c, acked=eids)
+    check_config_oracle(c)
+
+
+def test_learner_catches_up_via_pipelined_chunked_snapshot():
+    cfg = RaftConfig(snapshot_threshold=8, snapshot_chunk_bytes=256, snapshot_chunk_window=4)
+    c = Cluster(n=3, protocol="raft", seed=102, config=cfg)
+    lead = c.run_until_leader()
+    eids = [c.submit(f"w{i}", via=lead) for i in range(24)]
+    assert c.run_until_committed(eids)
+    c.run(2000)  # let compaction pass the joiner's horizon
+    assert c.nodes[lead].snapshot is not None
+    c.add_learner("n3")
+    assert c.run_until_membership()
+    c.run(5000)
+    joiner = c.nodes["n3"]
+    assert joiner.commit_index >= 24, "learner not backfilled"
+    assert c.metrics.counters.get("snapshot_chunks_sent", 0) > 0, (
+        "learner catch-up did not use the chunked snapshot path"
+    )
+    check_commit_history(c, acked=eids)
+    check_config_oracle(c)
+
+
+def test_promotion_goes_through_joint_consensus():
+    c = Cluster(n=3, protocol="fastraft", seed=103)
+    lead = c.run_until_leader()
+    eids = [c.submit(f"p{i}", via=lead) for i in range(4)]
+    assert c.run_until_committed(eids)
+    c.add_node("n3")  # learner catch-up + promotion
+    assert c.run_until_membership()
+    lead = c.run_until_leader()
+    cfg = c.nodes[lead].cluster_config
+    assert "n3" in cfg.voters and not cfg.joint
+    assert check_config_oracle(c) >= 3  # learner add, joint, final
+    # The promoted voter now carries proposals.
+    e = c.submit("from-new-voter", via="n3")
+    assert c.run_until_committed([e], 30_000)
+    check_commit_history(c, acked=eids + [e])
+
+
+def test_at_most_one_config_change_in_flight():
+    c = Cluster(n=3, protocol="raft", seed=104)
+    lead = c.run_until_leader()
+    node = c.nodes[lead]
+    eid1, out = node.propose_config_change(
+        voters=sorted(set(node.cluster_config.voters) | {"nX"}),
+        now=c.sim.now,
+    )
+    assert eid1 is not None
+    # Second change while the joint entry is uncommitted: refused.
+    eid2, _ = node.propose_config_change(
+        voters=sorted(set(node.cluster_config.voters) | {"nY"}),
+        now=c.sim.now,
+    )
+    assert eid2 is None
+    # Even after the joint half commits, the transition must finalize
+    # before a NEW change is admitted (config_change_in_flight covers the
+    # joint phase too).
+    assert node.config_change_in_flight()
+
+
+# ------------------------------------------------------- removals and swaps
+
+
+def test_leader_removed_mid_joint_config():
+    """Removing the leader itself: the leader drives its own removal
+    through joint consensus, steps down only after C_new commits, and a
+    new leader emerges among the survivors — under message loss."""
+    c = Cluster(n=5, protocol="raft", seed=105, loss=0.05, jitter=2.0)
+    lead = c.run_until_leader(30_000)
+    assert lead is not None
+    eids = [c.submit(f"r{i}", via=lead) for i in range(6)]
+    assert c.run_until_committed(eids, 30_000)
+    c.remove_node(lead, timeout=120_000.0)
+    assert c.run_until_membership(180_000)
+    new_lead = c.run_until_leader(60_000)
+    assert new_lead is not None and new_lead != lead
+    cfg = c.nodes[new_lead].cluster_config
+    assert lead not in cfg.members and not cfg.joint
+    more = [c.submit(f"s{i}", via=new_lead) for i in range(4)]
+    assert c.run_until_committed(more, 60_000)
+    check_commit_history(c, acked=committed_acks(c, eids + more))
+    assert check_config_oracle(c) >= 2  # joint + final
+
+
+def test_replace_leader_under_continuous_load():
+    """Acceptance scenario: a 5-node cluster survives replace_node of the
+    leader itself with zero acked-commit loss."""
+    c = Cluster(n=5, protocol="fastraft", seed=106)
+    lead = c.run_until_leader()
+    other = [n for n in c.nodes if n != lead][0]
+    acked = _drip(c, other, "pre", 5)
+    c.replace_node(lead, "n9")
+    # Load keeps flowing through a non-leader while the swap runs.
+    acked += _drip(c, other, "mid", 20)
+    assert c.run_until_membership(240_000)
+    new_lead = c.run_until_leader(60_000)
+    assert new_lead not in (None, lead)
+    cfg = c.nodes[new_lead].cluster_config
+    assert "n9" in cfg.voters and lead not in cfg.members
+    acked += _drip(c, new_lead, "post", 5)
+    c.run(5000)
+    durable = committed_acks(c, acked)
+    assert len(durable) >= 25, f"only {len(durable)} of {len(acked)} acked"
+    check_commit_history(c, acked=durable)
+    assert check_config_oracle(c) >= 3
+    c.check_log_consistency()
+
+
+def test_learner_promoted_during_partition():
+    """The promotion joint config commits while the learner itself is
+    partitioned away: majorities of C_old (3 voters) and C_new (4 voters)
+    are both reachable without it, so the transition completes; the new
+    voter catches up on heal."""
+    c = Cluster(n=3, protocol="raft", seed=107)
+    lead = c.run_until_leader()
+    c.add_learner("n3")
+    assert c.run_until_membership()
+    c.run(2000)  # learner catches up fully
+    c.partition(["n3"], [n for n in c.nodes if n != "n3"])
+    c.promote("n3", timeout=120_000.0)
+    assert c.run_until_membership(180_000)
+    lead = c.run_until_leader()
+    cfg = c.nodes[lead].cluster_config
+    assert "n3" in cfg.voters and not cfg.joint
+    # 4 voters, one dark: majority 3 still commits.
+    eids = [c.submit(f"d{i}", via=lead) for i in range(4)]
+    assert c.run_until_committed(eids, 30_000)
+    c.heal()
+    c.run(5000)
+    assert c.nodes["n3"].commit_index >= c.nodes[lead].commit_index - 1
+    check_commit_history(c, acked=eids)
+    check_config_oracle(c)
+
+
+def test_membership_op_fails_explicitly_without_quorum():
+    c = Cluster(n=3, protocol="raft", seed=108)
+    lead = c.run_until_leader()
+    others = [n for n in c.nodes if n != lead]
+    c.crash(others[0])
+    c.crash(others[1])
+    c.run(1000)
+    c.remove_node(others[0], timeout=5_000.0)
+    with pytest.raises(MembershipError):
+        c.run_until_membership(30_000)
+
+
+# ------------------------------------------------------ fast-track boundary
+
+
+def test_fast_track_slots_straddle_config_boundary():
+    """Fast-track windows proposed right around a promotion: slots land on
+    both sides of the config entry, the joint phase requires ceil(3V/4) in
+    BOTH voter sets, and every command still commits exactly once."""
+    c = Cluster(n=4, protocol="fastraft", seed=109)
+    lead = c.run_until_leader()
+    prop = [n for n in c.nodes if n != lead][0]
+    warm = [c.submit(f"warm{i}", via=prop) for i in range(4)]
+    assert c.run_until_committed(warm)
+    c.add_learner("n4")
+    assert c.run_until_membership()
+    c.run(1500)
+    acked = list(warm)
+    c.promote("n4", timeout=120_000.0)
+    # Fast proposals race the joint/final config entries.
+    for i in range(8):
+        acked.append(c.submit(f"straddle{i}", via=prop))
+        c.run(60)
+    assert c.run_until_membership(120_000)
+    assert c.run_until_committed(acked, 60_000)
+    lead = c.run_until_leader()
+    assert "n4" in c.nodes[lead].cluster_config.voters
+    tail = [c.submit(f"after{i}", via=prop) for i in range(4)]
+    assert c.run_until_committed(tail, 30_000)
+    c.run(3000)
+    check_commit_history(c, acked=acked + tail)
+    assert check_config_oracle(c) >= 3
+    c.check_log_consistency()
+
+
+# ------------------------------------------------------------ hierarchy
+
+
+def test_pod_rebalance_under_loss():
+    """Live move of a host between pods under local message loss: both
+    sides are pod-local joint-consensus changes, the mover catches up on
+    the destination's state via snapshot, and neither pod loses an acked
+    commit. The global tier never hears about host placement."""
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=4, seed=110, local_loss=0.05)
+    h.bootstrap()
+    p0, p1 = h.pods["pod0"], h.pods["pod1"]
+    acked0 = [p0.submit(f"a{i}", via=p0.run_until_leader()) for i in range(6)]
+    acked1 = [p1.submit(f"b{i}", via=p1.run_until_leader()) for i in range(6)]
+    assert p0.run_until_committed(acked0, 60_000)
+    assert p1.run_until_committed(acked1, 60_000)
+    global_members_before = sorted(h.global_nodes)
+    h.move_node("pod0h3", "pod0", "pod1")
+    assert h.run_until_moved(300_000)
+    assert "pod0h3" not in p0.nodes and "pod0h3" in p1.nodes
+    lead1 = p1.run_until_leader(60_000)
+    assert "pod0h3" in p1.nodes[lead1].cluster_config.voters
+    # The mover runs the DESTINATION pod's state (snapshot catch-up).
+    h.run(5000)
+    assert p1.nodes["pod0h3"].commit_index > 0
+    more1 = [p1.submit(f"c{i}", via="pod0h3") for i in range(3)]
+    assert p1.run_until_committed(more1, 60_000)
+    check_commit_history(p0, acked=committed_acks(p0, acked0))
+    check_commit_history(p1, acked=committed_acks(p1, acked1 + more1))
+    check_config_oracle(p0)
+    check_config_oracle(p1)
+    # Pod rebalancing is invisible to the global tier.
+    assert sorted(h.global_nodes) == global_members_before
+    h.check_consistency()
+
+
+def test_move_unaffected_by_unrelated_failed_op():
+    """A stale failure record from an UNRELATED membership op must not
+    poison a later pod move: moves judge failure on their own ops only."""
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=4, seed=113)
+    h.bootstrap()
+    p1 = h.pods["pod1"]
+    # Doomed op: promote a node that does not exist -> can never catch up.
+    p1.promote("ghost", timeout=2_000.0)
+    h.run(10_000)  # fails; record stays (nobody drains it)
+    assert p1.membership_failures
+    mv = h.move_node("pod0h3", "pod0", "pod1")
+    assert h.run_until_moved(300_000)
+    assert mv.done
+    # The stale record is untouched: run_until_membership still surfaces it.
+    assert p1.membership_failures
+    with pytest.raises(MembershipError):
+        p1.run_until_membership(1000)
+
+
+def test_global_tier_catchup_uses_chunked_snapshots():
+    """A pod dark through enough global commits that the global leader
+    compacts past it must catch up via chunked InstallSnapshot over the
+    slow links — and still deliver the full global sequence to its pod."""
+    h = HierarchicalCluster(n_pods=3, hosts_per_pod=3, seed=111)
+    h.bootstrap()
+    dark = [p for p in h.pod_ids if p != h.global_leader()][0]
+    h.partition_pod(dark)
+    eids = [h.propose_global(f"g{i}", via_pod=h.global_leader()) for i in range(80)]
+    assert h.run_until_globally_committed(eids, 180_000)
+    glead = h.global_nodes[h.global_leader()]
+    assert glead.snapshot is not None, "global tier never compacted"
+    h.heal_pod(dark)
+    h.run(90_000)
+    assert h.global_metrics.counters.get("snapshot_chunks_sent", 0) > 0
+    assert h.global_nodes[dark].commit_index >= 80
+    # Snapshot-jumped history still down-propagates: full delivery.
+    assert h.run_until_delivered(80, 120_000)
+    h.check_consistency()
+
+
+@pytest.mark.slow
+def test_replace_pod_leader_with_concurrent_move():
+    """Acceptance scenario: a 5-host pod survives replace_node of its own
+    leader while a concurrent move_node rebalances a host INTO it from the
+    other pod — zero acked-commit loss, both oracles green."""
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=5, seed=112)
+    h.bootstrap()
+    p0, p1 = h.pods["pod0"], h.pods["pod1"]
+    lead0 = p0.run_until_leader()
+    other0 = [n for n in p0.nodes if n != lead0][0]
+    acked0 = [p0.submit(f"pre{i}", via=other0) for i in range(4)]
+    assert p0.run_until_committed(acked0, 60_000)
+    # Concurrent: replace pod0's leader AND move a pod1 host into pod0.
+    p0.replace_node(lead0, "pod0h9", timeout=240_000.0)
+    h.move_node("pod1h4", "pod1", "pod0", timeout=300_000.0)
+    for i in range(20):
+        acked0.append(p0.submit(f"mid{i}", via=other0))
+        h.run(200)
+    assert p0.run_until_membership(300_000)
+    assert h.run_until_moved(300_000)
+    new_lead0 = p0.run_until_leader(60_000)
+    assert new_lead0 not in (None, lead0)
+    cfg = p0.nodes[new_lead0].cluster_config
+    assert "pod0h9" in cfg.voters and "pod1h4" in cfg.voters
+    assert lead0 not in cfg.members and not cfg.joint
+    acked0.append(p0.submit("post", via=new_lead0))
+    h.run(5000)
+    durable = committed_acks(p0, acked0)
+    assert len(durable) >= 20
+    check_commit_history(p0, acked=durable)
+    check_config_oracle(p0)
+    check_config_oracle(p1)
+    h.check_consistency()
