@@ -445,7 +445,7 @@ class FastRaftNode(RaftNode):
         # Finalize comes from the live leader: counts as leader contact for
         # lease-mode vote stickiness (it does NOT reset the election timer —
         # heartbeats own liveness detection, exactly as in the seed).
-        self._last_leader_contact = now
+        self._note_leader_contact(now)
         window = msg.window if msg.window else (
             (msg.entry,) if msg.entry is not None else ()
         )
@@ -638,6 +638,18 @@ class FastRaftNode(RaftNode):
         self._finalized_held.clear()
         self._count("recoveries")
         return out
+
+    def _on_leadership_lost(self, now: float) -> None:
+        """Step-down (higher term, CheckQuorum, removal from config): drop
+        every leader-volatile piece of fast-track state. Tallies and held
+        finalized slots are THIS leadership's vote accounting — a later
+        re-election must rebuild them from vote replies (_recover), not
+        trust counts from before the step-down. fast_slots stay: a
+        tentative slot is this node's durable FCFS vote as an ACCEPTOR,
+        which survives role changes by design."""
+        self.tallies.clear()
+        self._finalized_held.clear()
+        self._finalize_accum = None
 
     # ------------------------------------------------- linearizable reads
 

@@ -29,7 +29,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.fast_raft import FastRaftNode
 from repro.core.metrics import Recorder
 from repro.core.raft import RaftConfig, RaftNode
-from repro.core.sim import Cluster, LinkModel, MembershipError, Simulation
+from repro.core.sim import Adversary, Cluster, LinkModel, MembershipError, Simulation
 from repro.core.statemachine import LogListMachine, StateMachine
 from repro.core.types import Entry, EntryId, Message, NodeId
 
@@ -214,6 +214,22 @@ class HierarchicalCluster:
         # Live pod rebalancing records (move_node).
         self._moves: List[PodMove] = []
         self._move_poll_scheduled = False
+        # Optional fault injector for the GLOBAL tier's links (per-pod
+        # injectors go through set_pod_adversary — pods are Clusters).
+        self.global_adversary: Optional[Adversary] = None
+
+    # ----------------------------------------------------------- adversaries
+
+    def set_pod_adversary(self, pod: str, adversary: Optional[Adversary]) -> None:
+        """Install (or clear, with None) a message-level fault injector on
+        ONE pod's local links — the per-pod blast radius the hierarchy is
+        supposed to contain: a pod under adversarial fire may lose local
+        availability, but the global tier rides through on its quorums."""
+        self.pods[pod].adversary = adversary
+
+    def set_global_adversary(self, adversary: Optional[Adversary]) -> None:
+        """Install (or clear) a fault injector on the global tier's links."""
+        self.global_adversary = adversary
 
     # --------------------------------------------------------- global plumbing
 
@@ -237,6 +253,15 @@ class HierarchicalCluster:
     def _global_send(self, src: str, dst: str, msg: Message) -> None:
         if dst not in self.global_nodes:
             return
+        adv = self.global_adversary
+        if adv is not None and adv.active(self.sim.now):
+            copies = adv.apply(msg, self.global_metrics)
+        else:
+            copies = [msg]
+        for m in copies:
+            self._global_transmit(dst, m)
+
+    def _global_transmit(self, dst: str, msg: Message) -> None:
         if self.global_link.loss > 0 and self.sim.rng.random() < self.global_link.loss:
             self.global_metrics.count("dropped")
             return

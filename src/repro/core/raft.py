@@ -43,6 +43,8 @@ from repro.core.types import (
     InstallSnapshotReply,
     Message,
     NodeId,
+    PreVoteArgs,
+    PreVoteReply,
     ReadIndexProbe,
     ReadIndexProbeReply,
     ReadQuery,
@@ -93,6 +95,21 @@ class RaftConfig:
     election_timeout_min: float = 150.0
     election_timeout_max: float = 300.0
     heartbeat_interval: float = 50.0
+    # Adversarial hardening (both default OFF so seed-era deterministic
+    # schedules are untouched; the fuzzer profile and hardened deployments
+    # turn them on together):
+    #   pre_vote — an election timeout starts a non-term-burning PreVote
+    #       probe round; only a candidate that a quorum WOULD elect (log
+    #       up to date, no voter has heard from a live leader within
+    #       election_timeout_min) bumps its term and campaigns for real. A
+    #       rejoining partitioned/removed node therefore never inflates
+    #       terms or deposes a healthy leader.
+    #   check_quorum — a leader that has not heard from a commit quorum
+    #       within election_timeout_max steps down, closing the
+    #       partitioned-leader window (stale reads under a lease the
+    #       quorum stopped renewing; clients blocked on a zombie leader).
+    pre_vote: bool = False
+    check_quorum: bool = False
     # Fast Raft only (kept here so one config type serves both protocols):
     fast_track: bool = False
     fast_vote_timeout: float = 120.0  # slot falls back to classic after this
@@ -279,6 +296,14 @@ class RaftNode:
 
         # Candidate state.
         self.votes_received: Dict[NodeId, RequestVoteReply] = {}
+        # PreVote campaign state (config.pre_vote): the prospective term we
+        # are probing for (0 = no campaign) and the voters that granted it.
+        # Volatile — a probe round is never persisted.
+        self._prevote_term = 0
+        self._prevotes: set = set()
+        # When we became leader (sim time): the quorum-contact floor for
+        # CheckQuorum — winning the election IS hearing from a quorum.
+        self._lead_since = -1.0e18
 
         # Timers (absolute sim times).
         self.election_deadline = 0.0
@@ -470,12 +495,15 @@ class RaftNode:
         )
 
     def _become_follower(self, term: int, now: float) -> None:
+        was_leader = self.role is Role.LEADER
         if term > self.term:
             self.term = term
             self.voted_for = None
             self._persist_hard_state()
         self.role = Role.FOLLOWER
         self.votes_received = {}
+        self._prevote_term = 0
+        self._prevotes = set()
         # Commands coalescing in the leader batch buffer were never appended;
         # put them back on the client queue so they re-route to the new leader.
         if self._batch_buffer:
@@ -488,6 +516,8 @@ class RaftNode:
         self._pending_stepdown = False
         self._reset_read_leadership_state()
         self._reset_election_timer(now)
+        if was_leader:
+            self._on_leadership_lost(now)  # FastRaft hook
 
     def _reset_read_leadership_state(self) -> None:
         """Drop all leadership-scoped read/lease state. Pending reads from
@@ -542,6 +572,7 @@ class RaftNode:
     def _become_leader(self, now: float) -> Outputs:
         self.role = Role.LEADER
         self.leader_id = self.id
+        self._lead_since = now
         self.next_index = {p: self.last_log_index() + 1 for p in self.peers()}
         self.match_index = {p: 0 for p in self.peers()}
         self._inflight = {}
@@ -562,6 +593,126 @@ class RaftNode:
             return self._become_leader(now)
         return []
 
+    # ------------------------------------------------------------- pre-vote
+
+    def _begin_prevote(self, now: float) -> Outputs:
+        """Start a PreVote probe round for term + 1. The node stays a
+        FOLLOWER and burns no term: only a quorum of grants (per every
+        active voter set, like a real election) converts the probe into
+        :meth:`_become_candidate`."""
+        self._reset_election_timer(now)
+        self._prevote_term = self.term + 1
+        self._prevotes = {self.id}
+        self._count("prevote_rounds")
+        lli, llt = self._election_log_position()
+        args = PreVoteArgs(
+            term=self._prevote_term,
+            src=self.id,
+            candidate_id=self.id,
+            last_log_index=lli,
+            last_log_term=llt,
+        )
+        out: Outputs = [(p, args) for p in self.peers()]
+        self._count("msgs_out", len(out))
+        return out + self._maybe_win_prevote(now)
+
+    def _maybe_win_prevote(self, now: float) -> Outputs:
+        if self._prevote_term and self.cluster_config.election_won(self._prevotes):
+            self._prevote_term = 0
+            self._prevotes = set()
+            return self._become_candidate(now)
+        return []
+
+    def _handle_PreVoteArgs(self, msg: PreVoteArgs, now: float) -> Outputs:
+        # msg.term is PROSPECTIVE — never adopted (on_message defers the
+        # generic term bump for this type). Grant iff the candidate would
+        # win a real vote here AND nothing suggests a live leader: pre-vote
+        # recency gating is unconditional (not lease-gated) because it
+        # costs no liveness — a genuinely dead leader stops refreshing
+        # _last_leader_contact everywhere within one election timeout.
+        grant = False
+        if msg.term > self.term and not self._vote_is_disruptive(
+            msg.candidate_id, now, prevote=True
+        ):
+            lli, llt = self._election_log_position()
+            grant = (msg.last_log_term, msg.last_log_index) >= (llt, lli)
+        # Granting records nothing and resets no timer: a pre-vote is a
+        # prediction, not a promise.
+        return [
+            (
+                msg.src,
+                PreVoteReply(
+                    term=self.term,
+                    src=self.id,
+                    vote_granted=grant,
+                    prospective_term=msg.term,
+                ),
+            )
+        ]
+
+    def _handle_PreVoteReply(self, msg: PreVoteReply, now: float) -> Outputs:
+        # A higher real term in the reply was already adopted by the
+        # generic bump in on_message (which also cancelled the campaign).
+        if (
+            self._prevote_term == 0
+            or msg.prospective_term != self._prevote_term
+            or not msg.vote_granted
+        ):
+            return []
+        self._prevotes.add(msg.src)
+        return self._maybe_win_prevote(now)
+
+    # -------------------------------------------- disruption defense helpers
+
+    def _quorum_contact_age(self, now: float) -> float:
+        """How long since this LEADER last heard from a commit quorum.
+        The basis is the send time of the newest quorum-confirmed
+        heartbeat/probe round (tracked unconditionally by _note_round_ack),
+        floored at election win time; a singleton quorum is always in
+        contact with itself."""
+        if self.cluster_config.commit_ok({self.id}):
+            return 0.0
+        return now - max(self._confirmed_sent_sim, self._lead_since)
+
+    def _has_recent_leader_contact(self, now: float) -> bool:
+        """Evidence of a live current leadership within one minimum
+        election timeout: for a follower/candidate, contact FROM a leader;
+        for a leader, contact WITH its quorum (a deposed leader stranded in
+        a minority loses this within one timeout and stops rejecting)."""
+        if self.role is Role.LEADER:
+            return self._quorum_contact_age(now) < self.config.election_timeout_min
+        return now - self._last_leader_contact < self.config.election_timeout_min
+
+    def _vote_is_disruptive(
+        self, candidate: NodeId, now: float, prevote: bool
+    ) -> bool:
+        """Should this vote/pre-vote request be refused as disruption?
+
+        - A candidate OUTSIDE every active voter set (a removed node, or a
+          node campaigning on a stale config) is refused whenever we have
+          recent evidence of a live leadership — the removed-node defense.
+          Refused requests also never bump our term (see on_message), so a
+          rejoining removed node cannot inflate terms or depose anyone.
+        - An in-config candidate is refused on leader-contact recency:
+          always for pre-votes (that is PreVote's semantics), but for REAL
+          votes only under lease mode (vote stickiness) — lease-free
+          configs keep the seed's classic-Raft behavior.
+        """
+        recent = self._has_recent_leader_contact(now)
+        if not self.cluster_config.is_voter(candidate):
+            return recent
+        if prevote:
+            return recent
+        return self.config.lease_duration_ms > 0 and recent
+
+    def _note_leader_contact(self, now: float) -> None:
+        """Record valid-leader contact (AppendEntries / probe / snapshot
+        traffic): the vote-stickiness clock restarts and any PreVote
+        campaign in progress is abandoned — there IS a live leader."""
+        self._last_leader_contact = now
+        self._prevote_term = 0
+        self._prevotes = set()
+
     # ---- Hooks overridden by FastRaftNode -------------------------------
 
     def _election_log_position(self) -> Tuple[int, int]:
@@ -578,6 +729,9 @@ class RaftNode:
     def _on_leadership_acquired(self, now: float) -> Outputs:
         return []  # FastRaft hook: slot recovery
 
+    def _on_leadership_lost(self, now: float) -> None:
+        pass  # FastRaft hook: drop leader-volatile fast-track state
+
     def _on_slot_overwritten(self, index: int, old: Slot, new: Slot) -> None:
         pass  # FastRaft hook: re-propose displaced commands
 
@@ -591,6 +745,19 @@ class RaftNode:
             return []
         out: Outputs = []
         if self.role is Role.LEADER:
+            # CheckQuorum: a leader that cannot confirm a commit quorum
+            # within a full election timeout abdicates — somewhere a
+            # majority has stopped hearing it and may elect (or already
+            # elected) a successor; lingering only strands clients and
+            # (under leases) risks serving reads a rival has overwritten.
+            if (
+                self.config.check_quorum
+                and self._quorum_contact_age(now) > self.config.election_timeout_max
+            ):
+                self._count("checkquorum_stepdowns")
+                self.leader_id = None
+                self._become_follower(self.term, now)
+                return self._drain_outbox(out)
             if self._batch_buffer and now >= self._batch_deadline:
                 out += self._flush_batch(now)
             out += self._config_tick(now)
@@ -611,7 +778,14 @@ class RaftNode:
             # Learners and removed members never campaign: they are not in
             # any voter set, so an election they start could only disrupt.
             if self.is_voter():
-                out += self._become_candidate(now)
+                if self.config.pre_vote:
+                    # A timed-out CANDIDATE (split vote / lost quorum mid-
+                    # election) also reverts to probing: with PreVote on, a
+                    # term is only ever burned behind a winning probe.
+                    self.role = Role.FOLLOWER
+                    out += self._begin_prevote(now)
+                else:
+                    out += self._become_candidate(now)
             else:
                 self._reset_election_timer(now)
         out += self._tick_protocol(now)  # FastRaft hook (fast-slot timeouts)
@@ -643,7 +817,17 @@ class RaftNode:
         if not self.alive:
             return []
         self._count("msgs_in")
-        if msg.term > self.term:
+        # Standard term rule — with one carve-out: vote REQUESTS defer the
+        # bump to their handler, which adopts the term only when the
+        # request is not refused as disruption (_vote_is_disruptive). A
+        # rejoining removed/partitioned node with an inflated term would
+        # otherwise depose a healthy leader through the bump alone, vote
+        # denied or not. (A PreVoteArgs term is prospective and is NEVER
+        # adopted; PreVoteReply carries the voter's real term and bumps
+        # normally, cancelling the campaign.)
+        if msg.term > self.term and not isinstance(
+            msg, (RequestVoteArgs, PreVoteArgs)
+        ):
             self._become_follower(msg.term, now)
         handler = getattr(self, f"_handle_{type(msg).__name__}", None)
         if handler is None:
@@ -654,16 +838,17 @@ class RaftNode:
 
     def _handle_RequestVoteArgs(self, msg: RequestVoteArgs, now: float) -> Outputs:
         grant = False
-        # Vote stickiness (lease mode only): refuse to elect a rival within
-        # election_timeout_min of hearing from a live leader. Without this a
-        # disruptive candidate could win DURING an active lease and commit
-        # writes the lease holder's local reads would then miss. Only
-        # enabled with leases so lease-free configs keep seed behavior.
-        sticky = (
-            self.config.lease_duration_ms > 0
-            and now - self._last_leader_contact < self.config.election_timeout_min
-        )
-        if msg.term >= self.term and not sticky:
+        # Disruption defense (see _vote_is_disruptive): vote stickiness for
+        # in-config rivals under lease mode — without it a disruptive
+        # candidate could win DURING an active lease and commit writes the
+        # lease holder's local reads would then miss — plus the
+        # out-of-config (removed node) rejection. Refused requests do not
+        # bump our term either: the deferred on_message rule.
+        if msg.term >= self.term and not self._vote_is_disruptive(
+            msg.candidate_id, now, prevote=False
+        ):
+            if msg.term > self.term:
+                self._become_follower(msg.term, now)
             lli, llt = self._election_log_position()
             up_to_date = (msg.last_log_term, msg.last_log_index) >= (llt, lli)
             if up_to_date and self.voted_for in (None, msg.candidate_id):
@@ -840,6 +1025,7 @@ class RaftNode:
                         last_term=xfer.last_term,
                         offset=off,
                         data=data,
+                        data_crc=zlib.crc32(data),
                         total_bytes=len(xfer.data),
                         done=done,
                         leader_commit=self.commit_index,
@@ -861,7 +1047,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
-        self._last_leader_contact = now
+        self._note_leader_contact(now)
         deferred: Outputs = self._flush_pending(now) if first_leader_contact else []
 
         # Consistency check. Tentative slots don't count as matching history:
@@ -1018,15 +1204,15 @@ class RaftNode:
         if not self._pending_client:
             return []
         pending, self._pending_client = self._pending_client, []
-        out: Outputs = []
-        for command, entry_id in pending:
-            if self._seen(entry_id):
-                continue
-            if self.role is Role.LEADER:
-                out += self._leader_append(command, entry_id, now)
-            else:
-                out += self._non_leader_submit(command, entry_id, now)
-        return out
+        fresh = [(c, e) for c, e in pending if not self._seen(e)]
+        if not fresh:
+            return []
+        if self.role is Role.LEADER:
+            return self._leader_append_many(fresh, now)
+        # Flush the whole queue as ONE relay RPC: per-entry forwards would
+        # race each other through link jitter and break per-client FIFO for
+        # a batch queued before the leader was known.
+        return self._non_leader_submit_batch(fresh, now)
 
     def _handle_ForwardOperation(self, msg: ForwardOperation, now: float) -> Outputs:
         if self.role is not Role.LEADER:
@@ -1205,7 +1391,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
-        self._last_leader_contact = now
+        self._note_leader_contact(now)
         return [
             (
                 msg.src,
@@ -1558,7 +1744,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
-        self._last_leader_contact = now
+        self._note_leader_contact(now)
         snap = msg.snapshot
         if snap.last_index > self.commit_index:
             self._install_snapshot(snap, now)
@@ -1607,6 +1793,12 @@ class RaftNode:
     # ------------------------------------------------- chunked transfer
 
     def _handle_InstallSnapshotChunk(self, msg: InstallSnapshotChunk, now: float) -> Outputs:
+        if zlib.crc32(bytes(msg.data)) != msg.data_crc:
+            # Payload corrupted in flight: treat exactly like loss — no ack,
+            # no buffer append; the cursor-based heartbeat retransmission
+            # resends from the last acked offset.
+            self._count("corrupt_chunks_dropped")
+            return []
         if msg.term < self.term:
             return [
                 (
@@ -1620,7 +1812,7 @@ class RaftNode:
         if self.role is not Role.FOLLOWER:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
-        self._last_leader_contact = now
+        self._note_leader_contact(now)
         if msg.last_index <= self.commit_index:
             # Already caught up past this snapshot (e.g. a duplicate final
             # chunk after install): tell the leader where to resume.
@@ -1658,7 +1850,27 @@ class RaftNode:
         # msg.offset > cursor: a gap (we lost our buffer, e.g. restart
         # mid-transfer); replying with our cursor rewinds the leader.
         if msg.done and cursor >= msg.total_bytes:
-            snap = snapshot_from_bytes(bytes(buf["data"]))
+            try:
+                snap = snapshot_from_bytes(bytes(buf["data"]))
+            except (ValueError, KeyError, UnicodeDecodeError):
+                # Assembled bytes fail to decode (a corrupted chunk slipped
+                # past an older sender, or the buffer got mixed across
+                # transfers): discard the buffer and rewind the leader to
+                # offset 0 — a decode failure must restart the transfer,
+                # never crash the node.
+                self._count("snapshot_decode_failures")
+                self._incoming_snap = None
+                return [
+                    (
+                        msg.src,
+                        InstallSnapshotChunkReply(
+                            term=self.term,
+                            src=self.id,
+                            last_index=msg.last_index,
+                            next_offset=0,
+                        ),
+                    )
+                ]
             self._incoming_snap = None
             if snap.last_index > self.commit_index:
                 self._install_snapshot(snap, now)
@@ -1948,6 +2160,9 @@ class RaftNode:
         self.role = Role.FOLLOWER
         self.leader_id = None
         self.votes_received = {}
+        self._prevote_term = 0
+        self._prevotes = set()
+        self._lead_since = -1.0e18
         self.next_index = {}
         self.match_index = {}
         self._inflight = {}

@@ -81,6 +81,68 @@ class MembershipOp:
     def failed(self) -> bool:
         return self.state == "failed"
 
+class Adversary:
+    """Seeded message-level fault injector, consulted by :meth:`Cluster.send`
+    for every message while active (``now < until``).
+
+    Effects, each drawn independently from the adversary's OWN RNG stream
+    (never ``sim.rng`` — installing an adversary must not perturb the
+    deterministic schedule of the traffic it leaves alone):
+
+    - ``drop_p``       — the message vanishes (on top of link loss);
+    - ``dup_p``        — the message is delivered twice, with independent
+                         latency draws (classic network duplication);
+    - ``corrupt_p``    — payload corruption. Only DETECTABLE corruption is
+                         modeled (the protocol is crash-fault, not
+                         Byzantine): an ``InstallSnapshotChunk`` has a byte
+                         flipped in a COPY (its ``data_crc`` no longer
+                         matches, so the receiver discards it like loss);
+                         every other message type is dropped outright, as a
+                         frame that failed its transport checksum.
+
+    Fuzzer ops install/replace an adversary on a :class:`Cluster` (or a
+    single pod of a hierarchy) for a bounded window; ``None`` disables it.
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        drop_p: float = 0.0,
+        dup_p: float = 0.0,
+        corrupt_p: float = 0.0,
+        until: float = math.inf,
+    ):
+        self.rng = random.Random(zlib.crc32(b"adversary") ^ (seed * 2654435761 % 2**32))
+        self.drop_p = drop_p
+        self.dup_p = dup_p
+        self.corrupt_p = corrupt_p
+        self.until = until
+
+    def active(self, now: float) -> bool:
+        return now < self.until
+
+    def apply(self, msg: Message, metrics: Recorder) -> List[Message]:
+        """The message copies to actually transmit (possibly empty)."""
+        if self.drop_p > 0 and self.rng.random() < self.drop_p:
+            metrics.count("adv_dropped")
+            return []
+        if self.corrupt_p > 0 and self.rng.random() < self.corrupt_p:
+            if isinstance(msg, InstallSnapshotChunk) and msg.data:
+                # Never mutate in place: broadcast handlers share one
+                # message object across peers.
+                flipped = bytearray(msg.data)
+                flipped[self.rng.randrange(len(flipped))] ^= 0xFF
+                msg = dataclasses.replace(msg, data=bytes(flipped))
+                metrics.count("adv_corrupted")
+            else:
+                metrics.count("adv_corrupt_dropped")
+                return []
+        if self.dup_p > 0 and self.rng.random() < self.dup_p:
+            metrics.count("adv_duplicated")
+            return [msg, msg]
+        return [msg]
+
+
 # Rough fixed per-message framing cost (headers, term/id fields) for the
 # size-aware network model; only relative sizes matter.
 _MSG_BASE_BYTES = 64
@@ -261,6 +323,9 @@ class Cluster:
         # completed through the nodes' read_done_fn.
         self.reads: Dict[EntryId, Dict] = {}
         self._read_counter = 0
+        # Optional message-level fault injector (fuzzer hook); None =
+        # transparent transport, exactly the seed behavior.
+        self.adversary: Optional[Adversary] = None
         # Membership operation queue (serialized; see MembershipOp).
         self._mops: List[MembershipOp] = []
         self._mop_poll_scheduled = False
@@ -326,6 +391,14 @@ class Cluster:
             return
         if dst not in self.nodes:
             return
+        adv = self.adversary
+        if adv is not None and adv.active(self.sim.now):
+            for copy_ in adv.apply(msg, self.metrics):
+                self._transmit(src, dst, copy_)
+            return
+        self._transmit(src, dst, msg)
+
+    def _transmit(self, src: NodeId, dst: NodeId, msg: Message) -> None:
         link = self._link_for(src, dst)
         size_aware = link.bytes_per_ms > 0 or link.mtu_bytes > 0
         size = wire_size(msg) if size_aware else 0

@@ -379,6 +379,33 @@ class RequestVoteArgs(Message):
 
 
 @dataclasses.dataclass
+class PreVoteArgs(Message):
+    """PreVote probe (Raft dissertation section 9.6 / etcd PreVote).
+
+    ``term`` is the PROSPECTIVE term (candidate's term + 1) the sender
+    would campaign in — receivers never adopt it, which is the whole
+    point: a partitioned or removed node can probe forever without
+    inflating anyone's term. A voter answers based on log up-to-dateness
+    and leader-contact recency only; granting a pre-vote neither records a
+    ``voted_for`` nor resets the voter's election timer."""
+
+    candidate_id: NodeId = ""
+    last_log_index: int = 0
+    last_log_term: int = 0
+
+
+@dataclasses.dataclass
+class PreVoteReply(Message):
+    """``term`` is the voter's REAL current term (standard term rules apply
+    to the reply: a higher one cancels the probe). ``prospective_term``
+    echoes the probe's term so a candidate only counts grants for its
+    current campaign."""
+
+    vote_granted: bool = False
+    prospective_term: int = 0
+
+
+@dataclasses.dataclass
 class RequestVoteReply(Message):
     vote_granted: bool = False
     # Fast Raft recovery: voters ship a summary of their tentative tail so a
@@ -433,13 +460,19 @@ class InstallSnapshotChunk(Message):
     different identity than the receiver's in-progress transfer restarts the
     transfer (the leader compacted again); same identity + ``offset`` equal
     to the receiver's write cursor extends it. At most one chunk is in
-    flight per follower; each heartbeat retransmits the unacked chunk."""
+    flight per follower; each heartbeat retransmits the unacked chunk.
+
+    ``data_crc`` is the crc32 of ``data``: the receiver verifies it and
+    treats a mismatch exactly like loss (no ack; the cursor-based
+    retransmission resends the chunk), so a corrupted payload can never be
+    spliced into an assembling snapshot."""
 
     leader_id: NodeId = ""
     last_index: int = 0
     last_term: int = 0
     offset: int = 0
     data: bytes = b""
+    data_crc: int = 0
     total_bytes: int = 0
     done: bool = False
     leader_commit: int = 0

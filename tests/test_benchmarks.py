@@ -79,6 +79,19 @@ def test_membership_churn_replace_leader_dip_bounded():
     assert r["config_entries"] >= 3  # learner add, joint, final
 
 
+def test_membership_churn_hardened_dip_no_worse():
+    """PreVote + CheckQuorum must not slow leader replacement: the hardened
+    dip clears the same 2-timeout bar, within one probe round (~half a
+    timeout) of the unhardened baseline."""
+    base = membership_churn.run_scenario("replace_leader", loss=0.0,
+                                         steady_ops=6, churn_ops=15)
+    hard = membership_churn.run_scenario("replace_leader", loss=0.0,
+                                         steady_ops=6, churn_ops=15,
+                                         hardened=True)
+    assert hard["gap_timeouts"] < 2.0, hard
+    assert hard["gap_timeouts"] <= base["gap_timeouts"] + 0.5, (base, hard)
+
+
 def test_throughput_conflict_regime_falls_back_but_commits():
     """Simultaneous proposals from every non-leader deliberately collide on
     slots — the paper's conflict case: the fast track degrades to classic,

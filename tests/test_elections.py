@@ -1,0 +1,263 @@
+"""Election hardening: PreVote, CheckQuorum, and removed-node defense.
+
+The three adversarial-availability mechanisms this suite pins down:
+
+* **PreVote** — a timed-out node probes with a PROSPECTIVE term before
+  burning a real one; a partitioned minority node therefore rejoins at the
+  cluster's term and causes zero leader changes.
+* **CheckQuorum** — a leader that cannot reach a commit quorum for an
+  election timeout steps down instead of serving a stale view.
+* **Removed-node defense** — vote and pre-vote requests from a candidate
+  outside the cluster config are refused by any node with recent leader
+  contact, and a REFUSED request never adopts the candidate's term, so a
+  rejoining removed node cannot inflate cluster terms or depose a live
+  leader (the pre-hardening election storm).
+"""
+import pytest
+
+from repro.core.raft import RaftConfig, Role
+from repro.core.sim import Cluster
+from repro.core.types import PreVoteArgs, PreVoteReply
+
+
+def _cfg(**kw) -> RaftConfig:
+    return RaftConfig(**kw)
+
+
+def _elections(c: Cluster) -> int:
+    """Total leaderships ever elected (election-safety ledger)."""
+    return sum(len(s) for s in c.metrics.leaders.values())
+
+
+# ----------------------------------------------------------------- PreVote
+
+
+def test_prevote_cluster_elects_and_commits():
+    c = Cluster(n=5, protocol="fastraft", seed=101, config=_cfg(pre_vote=True))
+    assert c.run_until_leader() is not None
+    assert c.metrics.counters.get("prevote_rounds", 0) > 0
+    eids = c.submit_batch([f"w{i}" for i in range(5)], via=c.leader())
+    assert c.run_until_committed(eids)
+    c.check_log_consistency()
+
+
+def test_prevote_probe_burns_no_terms():
+    """An isolated minority node probes for multiple election timeouts
+    without ever incrementing its own term — the whole point of PreVote."""
+    c = Cluster(n=5, protocol="raft", seed=102, config=_cfg(pre_vote=True))
+    lead = c.run_until_leader()
+    term_before = c.nodes[lead].term
+    lone = [n for n in sorted(c.nodes) if n != lead][0]
+    c.partition([lone], [n for n in c.nodes if n != lone])
+    c.run(5000.0)  # ~16+ election timeouts alone
+    assert c.nodes[lone].term == term_before, "probe burned a term"
+    assert c.nodes[lone].role is not Role.LEADER
+    assert c.nodes[lone].metrics.counters.get("prevote_rounds", 0) > 1
+    assert c.nodes[lead].term == term_before
+
+
+def test_prevote_grant_records_nothing():
+    """A pre-vote grant is a statement about the PRESENT, not a promise:
+    it must not persist voted_for, bump the term, or reset the election
+    timer of the voter."""
+    c = Cluster(n=3, protocol="raft", seed=103, config=_cfg(pre_vote=True))
+    lead = c.run_until_leader()
+    voter_id = [n for n in sorted(c.nodes) if n != lead][0]
+    voter = c.nodes[voter_id]
+    # Cut the voter off long enough to lose leader-contact recency, so the
+    # probe is not refused as disruptive.
+    c.partition([voter_id], [n for n in c.nodes if n != voter_id])
+    c.run(1000.0)
+    term, voted = voter.term, voter.voted_for
+    probe = PreVoteArgs(
+        term=term + 1,
+        src="n9",
+        candidate_id="n9",
+        last_log_index=10**6,
+        last_log_term=10**6,
+    )
+    # Out-of-config candidates are refused only under recent leader
+    # contact, which the partition removed — so log up-to-dateness decides.
+    out = voter.on_message(probe, c.sim.now)
+    replies = [m for _, m in out if isinstance(m, PreVoteReply)]
+    assert replies and replies[0].vote_granted
+    assert replies[0].prospective_term == term + 1
+    assert replies[0].term == term, "reply must carry the REAL term"
+    assert voter.term == term, "pre-vote must not adopt the prospective term"
+    assert voter.voted_for == voted, "pre-vote must not persist a vote"
+
+
+def test_rejoining_follower_zero_disruption_with_prevote():
+    """Partition a follower, let it time out for seconds, heal: with
+    PreVote it rejoins at the cluster term and the leader never changes."""
+    c = Cluster(n=5, protocol="fastraft", seed=104, config=_cfg(pre_vote=True))
+    lead = c.run_until_leader()
+    lone = [n for n in sorted(c.nodes) if n != lead][0]
+    c.partition([lone], [n for n in c.nodes if n != lone])
+    c.run(5000.0)
+    before = _elections(c)
+    c.heal()
+    c.run(5000.0)
+    assert _elections(c) == before, "rejoin caused a leader change"
+    assert c.leader() == lead
+    assert c.nodes[lone].term == c.nodes[lead].term
+    c.check_log_consistency()
+
+
+def test_rejoining_follower_disrupts_without_prevote():
+    """Control for the test above: same schedule, PreVote off, no lease
+    (vote stickiness off) — the classic disruption happens, proving the
+    zero-disruption result is PreVote and not an accident of the seed."""
+    c = Cluster(n=5, protocol="fastraft", seed=104, config=_cfg(pre_vote=False))
+    lead = c.run_until_leader()
+    lone = [n for n in sorted(c.nodes) if n != lead][0]
+    c.partition([lone], [n for n in c.nodes if n != lone])
+    c.run(5000.0)
+    assert c.nodes[lone].term > c.nodes[lead].term, "term inflation expected"
+    before = _elections(c)
+    c.heal()
+    c.run(5000.0)
+    assert _elections(c) > before, (
+        "without PreVote the inflated-term rejoin must force a re-election"
+    )
+    c.check_log_consistency()
+
+
+# ------------------------------------------------------------- CheckQuorum
+
+
+def test_checkquorum_leader_steps_down_within_one_timeout():
+    cfg = _cfg(check_quorum=True)
+    c = Cluster(n=5, protocol="raft", seed=105, config=cfg)
+    lead = c.run_until_leader()
+    c.partition([lead], [n for n in c.nodes if n != lead])
+    cut_at = c.sim.now
+    c.sim.run_until(
+        cut_at + 10_000.0, stop=lambda: c.nodes[lead].role is not Role.LEADER
+    )
+    assert c.nodes[lead].role is not Role.LEADER, (
+        "stranded leader never stepped down"
+    )
+    assert c.metrics.counters.get("checkquorum_stepdowns", 0) >= 1
+    took = c.sim.now - cut_at
+    # One election_timeout_max after losing the quorum, plus a heartbeat of
+    # pre-partition contact slack and tick granularity.
+    budget = cfg.election_timeout_max + cfg.heartbeat_interval + 2 * 10.0
+    assert took <= budget, f"step-down took {took:.0f}ms (budget {budget:.0f})"
+
+
+def test_checkquorum_off_stranded_leader_keeps_leading():
+    """Control: without CheckQuorum a stranded leader happily stays leader
+    in its bubble (the stale-view hazard the knob exists to close)."""
+    c = Cluster(n=5, protocol="raft", seed=106, config=_cfg(check_quorum=False))
+    lead = c.run_until_leader()
+    c.partition([lead], [n for n in c.nodes if n != lead])
+    c.run(3000.0)
+    assert c.nodes[lead].role is Role.LEADER
+    assert c.metrics.counters.get("checkquorum_stepdowns", 0) == 0
+
+
+def test_checkquorum_majority_side_elects_and_old_leader_yields():
+    c = Cluster(
+        n=5, protocol="fastraft", seed=107,
+        config=_cfg(check_quorum=True, pre_vote=True),
+    )
+    old = c.run_until_leader()
+    rest = [n for n in c.nodes if n != old]
+    c.partition([old], rest)
+    c.run(5000.0)
+    majority_leaders = {
+        n for n in rest if c.nodes[n].role is Role.LEADER
+    }
+    assert majority_leaders, "majority side failed to elect"
+    assert c.nodes[old].role is not Role.LEADER
+    c.heal()
+    c.run(5000.0)
+    assert c.leader() is not None
+    c.check_log_consistency()
+
+
+def test_checkquorum_singleton_never_steps_down():
+    """A single-voter cluster is always in contact with its own quorum."""
+    c = Cluster(n=1, protocol="raft", seed=108, config=_cfg(check_quorum=True))
+    assert c.run_until_leader() is not None
+    c.run(5000.0)
+    assert c.nodes[c.leader()].role is Role.LEADER
+    assert c.metrics.counters.get("checkquorum_stepdowns", 0) == 0
+
+
+# ----------------------------------------------- removed-node vote defense
+
+
+def _removed_node_rejoin(pre_vote: bool, seed: int) -> Cluster:
+    """Partition n-victim away BEFORE removing it, so it never learns the
+    config that excludes it — the storm-prone rejoin scenario."""
+    c = Cluster(
+        n=5, protocol="fastraft", seed=seed, config=_cfg(pre_vote=pre_vote)
+    )
+    lead = c.run_until_leader()
+    victim = [n for n in sorted(c.nodes) if n != lead][-1]
+    c.partition([victim], [n for n in c.nodes if n != victim])
+    c.run(1000.0)
+    c.remove_node(victim)
+    assert c.run_until_membership(60_000.0)
+    c.run(2000.0)  # victim keeps timing out in its bubble
+    return c
+
+
+@pytest.mark.parametrize("pre_vote", [True, False])
+def test_rejoining_removed_node_cannot_disrupt(pre_vote):
+    """The tentpole regression: a removed node that still believes it is a
+    voter rejoins and campaigns. Voters with recent leader contact refuse
+    (vote AND pre-vote), and refusal never adopts the candidate's term —
+    zero leader changes, bounded voter terms, regardless of PreVote."""
+    c = _removed_node_rejoin(pre_vote, seed=109)
+    lead = c.leader()
+    assert lead is not None
+    victim = [n for n in c.nodes if not c.nodes[n].alive or
+              not c.nodes[lead].cluster_config.is_voter(n)]
+    c.heal()
+    before = _elections(c)
+    lead_term = c.nodes[lead].term
+    # Revive the removed node so it actually campaigns after the heal.
+    for v in victim:
+        if not c.nodes[v].alive:
+            c.nodes[v].restart(c.sim.now)
+    c.run(8000.0)
+    assert _elections(c) == before, "removed node forced a re-election"
+    assert c.leader() == lead
+    voter_terms = {
+        n: c.nodes[n].term
+        for n in c.nodes
+        if c.nodes[lead].cluster_config.is_voter(n)
+    }
+    assert all(t == lead_term for t in voter_terms.values()), (
+        f"voter terms inflated: {voter_terms} (leader at {lead_term})"
+    )
+    c.check_log_consistency()
+
+
+def test_removed_node_vote_request_not_adopted():
+    """Refusing a disruptive RequestVote must not bump the voter's term
+    (the pre-hardening gap: generic max-term adoption ran before the
+    disruption check, so a refused vote still inflated terms cluster-wide)."""
+    c = Cluster(n=3, protocol="raft", seed=110, config=_cfg())
+    lead = c.run_until_leader()
+    voter_id = [n for n in sorted(c.nodes) if n != lead][0]
+    voter = c.nodes[voter_id]
+    term = voter.term
+    from repro.core.types import RequestVoteArgs
+
+    out = voter.on_message(
+        RequestVoteArgs(
+            term=term + 50,
+            src="gone",
+            candidate_id="gone",  # not in the cluster config
+            last_log_index=10**6,
+            last_log_term=10**6,
+        ),
+        c.sim.now,
+    )
+    grants = [m for _, m in out if getattr(m, "vote_granted", False)]
+    assert not grants, "out-of-config candidate must be refused"
+    assert voter.term == term, "refused vote request still adopted the term"

@@ -1,0 +1,214 @@
+"""Protocol fuzzer: determinism, trace roundtrip, shrinking, oracles.
+
+The fuzzer itself (src/repro/core/fuzzer.py) is infrastructure that mints
+regression tests, so it gets the same correctness bar as the protocol: its
+schedules must be reproducible bit-for-bit per seed, its trace files must
+replay standalone, and its shrinker must preserve the failure it minimizes.
+"""
+import json
+
+import pytest
+
+from repro.core.fuzzer import (
+    FuzzProfile,
+    ProtocolFuzzer,
+    load_trace,
+    make_trace,
+    replay,
+    replay_trace_file,
+    save_trace,
+    shrink,
+)
+from repro.core.hierarchy import HierarchicalCluster
+from repro.core.raft import RaftConfig
+from repro.core.sim import Adversary, Cluster
+
+
+# ------------------------------------------------------------ determinism
+
+
+def test_same_seed_same_trace_and_verdict():
+    t1, r1 = ProtocolFuzzer(6, steps=25).run()
+    t2, r2 = ProtocolFuzzer(6, steps=25).run()
+    assert t1 == t2
+    assert r1.to_dict() == r2.to_dict()
+
+
+def test_different_seeds_differ():
+    t1 = ProtocolFuzzer(1, steps=25).generate()
+    t2 = ProtocolFuzzer(2, steps=25).generate()
+    assert t1["ops"] != t2["ops"]
+
+
+def test_generation_is_execution_free():
+    """Op generation draws from its own RNG with concrete node names — the
+    trace must be fully resolved JSON (replayable with no cluster state)."""
+    trace = ProtocolFuzzer(3, steps=30).generate()
+    # JSON roundtrip is identity: nothing in the trace is a live object.
+    assert json.loads(json.dumps(trace)) == trace
+    for op in trace["ops"]:
+        assert isinstance(op.get("op"), str)
+
+
+# ------------------------------------------------------- seeds pass oracles
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_fuzz_seed_passes(seed):
+    trace, report = ProtocolFuzzer(seed, steps=20).run()
+    assert report.ok, report.error
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(4, 13)))
+def test_fuzz_seed_passes_slow(seed):
+    trace, report = ProtocolFuzzer(seed, steps=40).run()
+    assert report.ok, report.error
+
+
+# ------------------------------------------------------------ trace format
+
+
+def test_trace_roundtrip(tmp_path):
+    trace, report = ProtocolFuzzer(5, steps=12).run()
+    path = str(tmp_path / "t.json")
+    save_trace(trace, path)
+    assert load_trace(path) == trace
+    replayed = replay_trace_file(path)
+    assert replayed.to_dict() == report.to_dict()
+
+
+def test_trace_rejects_unknown_version(tmp_path):
+    path = str(tmp_path / "bad.json")
+    save_trace({"version": 99, "ops": []}, path)
+    with pytest.raises(AssertionError):
+        load_trace(path)
+
+
+def test_replay_tolerates_invalid_ops():
+    """Shrinking deletes ops arbitrarily; bookkeeping-impossible ops
+    (unknown node, unknown kind) must be skipped, not crash the replay."""
+    trace = make_trace(
+        0,
+        [
+            {"op": "run", "ms": 2000.0},
+            {"op": "crash", "node": "nope"},
+            {"op": "restart", "node": "nope"},
+            {"op": "partition", "groups": [["n0"], ["ghost"]]},
+            {"op": "membership", "kind": "remove", "node": "ghost"},
+            {"op": "frobnicate"},
+            {"op": "run", "ms": 1000.0},
+        ],
+        expect={"require_leader": True},
+    )
+    report = replay(trace)
+    assert report.ok, report.error
+
+
+def test_expectations_enforced():
+    trace = make_trace(
+        0,
+        [{"op": "run", "ms": 3000.0}],
+        expect={"max_leader_elections": 0},
+    )
+    report = replay(trace)
+    assert not report.ok
+    assert "leaderships" in report.error
+
+
+# -------------------------------------------------------------- shrinking
+
+
+def test_shrink_preserves_failure_and_minimizes():
+    ops = [{"op": "run", "ms": 500.0} for _ in range(8)]
+    # The failure needs only the ops that elect a leader; expect forbids any
+    # election, so a single run op should survive shrinking.
+    trace = make_trace(0, ops, expect={"max_leader_elections": 0})
+    assert not replay(trace).ok
+    small, replays = shrink(trace)
+    assert replays > 0
+    assert not replay(small).ok, "shrunk trace must still fail"
+    assert len(small["ops"]) < len(ops)
+    assert len(small["ops"]) == 1
+
+
+# ------------------------------------------------------ adversary plumbing
+
+
+def test_adversary_deterministic_and_counts():
+    adv1 = Adversary(seed=7, drop_p=0.5, dup_p=0.3)
+    adv2 = Adversary(seed=7, drop_p=0.5, dup_p=0.3)
+    from repro.core.metrics import Recorder
+    from repro.core.types import AppendEntriesArgs
+
+    r1, r2 = Recorder(), Recorder()
+    msg = AppendEntriesArgs(term=1, src="n0")
+    out1 = [len(adv1.apply(msg, r1)) for _ in range(200)]
+    out2 = [len(adv2.apply(msg, r2)) for _ in range(200)]
+    assert out1 == out2, "same adversary seed must give same fault schedule"
+    assert r1.counters.get("adv_dropped", 0) > 0
+    assert r1.counters.get("adv_duplicated", 0) > 0
+
+
+def test_cluster_survives_dropping_duplicating_adversary():
+    c = Cluster(n=5, protocol="fastraft", seed=77,
+                config=RaftConfig(pre_vote=True, check_quorum=True))
+    assert c.run_until_leader() is not None
+    c.adversary = Adversary(seed=3, drop_p=0.2, dup_p=0.2,
+                            until=c.sim.now + 4000.0)
+    eids = c.submit_batch([f"w{i}" for i in range(10)])
+    c.run(6000.0)  # adversary window expires mid-way
+    assert c.run_until_committed(eids, 30_000.0)
+    assert c.metrics.counters.get("adv_dropped", 0) > 0
+    c.check_log_consistency()
+
+
+def test_corruption_of_snapshot_chunks_detected_and_healed():
+    """A bit-flipping adversary on chunked snapshot transfer: CRC catches
+    every flip (treated as loss), retransmission heals, and the follower
+    still restores a correct snapshot."""
+    cfg = RaftConfig(snapshot_threshold=8, snapshot_chunk_bytes=64,
+                     snapshot_chunk_window=2)
+    c = Cluster(n=3, protocol="raft", seed=11, config=cfg)
+    assert c.run_until_leader() is not None
+    ids = sorted(c.nodes)
+    straggler = [n for n in ids if n != c.leader()][0]
+    c.crash(straggler)
+    eids = c.submit_batch([f"cmd-{i:03d}" for i in range(30)], via=c.leader())
+    assert c.run_until_committed(eids, 30_000.0)
+    c.restart(straggler)
+    c.adversary = Adversary(seed=5, corrupt_p=0.3, until=c.sim.now + 5000.0)
+    c.run(25_000.0)
+    assert c.metrics.counters.get("adv_corrupted", 0) > 0, (
+        "adversary never hit a snapshot chunk"
+    )
+    assert c.metrics.counters.get("corrupt_chunks_dropped", 0) > 0, (
+        "receiver never detected a corrupted chunk"
+    )
+    c.check_log_consistency()
+    assert c.nodes[straggler].commit_index == c.nodes[c.leader()].commit_index
+
+
+def test_per_pod_adversary_isolated():
+    """A fault injector on one pod must not perturb the other pod or the
+    global tier — and the hierarchy still commits globally through it."""
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=41)
+    h.bootstrap()
+    h.set_pod_adversary("pod0", Adversary(seed=9, drop_p=0.15, dup_p=0.1))
+    h.run(3000)  # heartbeat traffic under fire
+    eids = [h.propose_global(f"g{i}") for i in range(3)]
+    assert h.run_until_globally_committed(eids, 60_000)
+    h.check_consistency()
+    assert h.pods["pod0"].metrics.counters.get("adv_dropped", 0) > 0
+    assert h.pods["pod1"].metrics.counters.get("adv_dropped", 0) == 0
+    assert h.global_metrics.counters.get("adv_dropped", 0) == 0
+
+
+def test_global_adversary_smoke():
+    h = HierarchicalCluster(n_pods=3, hosts_per_pod=3, seed=42)
+    h.bootstrap()
+    h.set_global_adversary(Adversary(seed=2, drop_p=0.2, dup_p=0.1))
+    eids = [h.propose_global(f"g{i}") for i in range(3)]
+    assert h.run_until_globally_committed(eids, 90_000)
+    h.check_consistency()
+    assert h.global_metrics.counters.get("adv_dropped", 0) > 0

@@ -1,0 +1,52 @@
+"""Named regression traces minted by the protocol fuzzer.
+
+Each JSON file under ``tests/regressions/`` is a shrunk, fully-resolved
+fault schedule (see ``src/repro/core/fuzzer.py`` for the trace format)
+that either reproduced a real pre-hardening failure or pins a hardened
+behavior we never want to regress:
+
+* ``rejoining_removed_node_storm`` — a node partitioned away before its
+  removal commits rejoins believing it is a voter. Pre-hardening its
+  campaigning inflated terms cluster-wide (observed: term 84); PreVote +
+  the out-of-config vote refusal keep every term at 1 and the leader
+  unchanged.
+* ``partitioned_leader_stale_lease`` — a leader isolated from its quorum
+  must CheckQuorum-step-down within one election timeout instead of
+  serving from a stale bubble; the read-freshness oracle guards the lease
+  path throughout.
+* ``election_storm_flapping_partition`` — four partition/heal flaps of one
+  follower. Pre-hardening: 5 leaderships, terms to 25. With PreVote: one
+  leadership, term 1.
+* ``corrupt_snapshot_chunks`` — a bit-flipping adversary on a chunked
+  snapshot transfer; every flip must be CRC-detected (treated as loss) and
+  the install must still complete through retransmission.
+* ``fifo_relay_flush_before_leader`` — minted by the fuzzer (shrunk from
+  seed 8): client batches queued before any leader exists were flushed as
+  per-entry relay RPCs that raced through link jitter, breaking
+  single-batch FIFO (observed commit order [4, 3, 1, 2]); the flush now
+  rides one relay RPC.
+
+Promoting a new fuzzer find is one step: copy the shrunk trace the CI
+artifact (or ``python -m repro.core.fuzzer``) produced into this directory.
+"""
+import glob
+import os
+
+import pytest
+
+from repro.core.fuzzer import replay_trace_file
+
+TRACE_DIR = os.path.join(os.path.dirname(__file__), "regressions")
+TRACES = sorted(glob.glob(os.path.join(TRACE_DIR, "*.json")))
+
+
+def test_regression_corpus_present():
+    assert len(TRACES) >= 4, "regression corpus went missing"
+
+
+@pytest.mark.parametrize(
+    "path", TRACES, ids=[os.path.splitext(os.path.basename(p))[0] for p in TRACES]
+)
+def test_regression_trace(path):
+    report = replay_trace_file(path)
+    assert report.ok, report.error
