@@ -200,13 +200,171 @@ def lease_speedup(protocol: str = "fastraft", seed: int = 11,
     }
 
 
+def scale_out_run(n_hosts: int, mode: str = "replica", seed: int = 17,
+                  duration_ms: float = 4000.0, clients_per_host: int = 4,
+                  write_interval_ms: float = 500.0) -> Dict[str, float]:
+    """Read scale-out: 3 voters + (n_hosts - 3) learners, closed-loop read
+    clients pinned to EVERY host. ``mode="replica"`` serves each read at
+    its host from applied state once ``last_applied`` passes the leader's
+    heartbeat-published watermark — zero leader round-trips — so aggregate
+    read throughput grows with hosts while the leader sees only its
+    replication traffic. ``mode="leader"`` is the scale-UP baseline: every
+    read funnels through the leader's ReadIndex path.
+
+    A trickle writer (one SET per ``write_interval_ms`` at the leader)
+    keeps the watermark advancing over live commits, read:write ~99:1.
+    """
+    cfg = RaftConfig(
+        heartbeat_interval=20.0,
+        # A fresh leader on an idle cluster has no current-term commit and
+        # cannot certify a watermark; the election-time noop closes that
+        # startup window (DESIGN.md §10).
+        election_noop=True,
+    )
+    c = Cluster(n=3, protocol="fastraft", seed=seed, base_latency=ONE_WAY,
+                jitter=0.0, config=cfg,
+                state_machine_factory=lambda nid: KVMachine())
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    lead = c.leader()
+    for i in range(n_hosts - 3):
+        c.add_learner(f"r{i}")
+    c.run(3000)  # learner catch-up + config commit
+    weids = [c.submit(f"SET key{k} v0", via=lead) for k in range(KV_KEYS)]
+    _await(c, lambda: all(
+        c.metrics.traces.get(e) is not None and c.metrics.traces[e].committed
+        for e in weids
+    ))
+    c.run(500)  # applies disseminate to every replica
+    assert c.leader() == lead
+    serving = sorted(c.nodes) if mode == "replica" else [lead]
+
+    lead_node = c.nodes[lead]
+    inbound = {"n": 0}
+    orig_on_message = lead_node.on_message
+
+    def counting_on_message(msg, now):
+        inbound["n"] += 1
+        return orig_on_message(msg, now)
+
+    lead_node.on_message = counting_on_message
+    try:
+        t0 = c.sim.now
+        t_end = t0 + duration_ms
+        clients = [
+            {"host": h, "rid": None, "k": (j * 5 + hi * 3) % KV_KEYS}
+            for hi, h in enumerate(serving) for j in range(clients_per_host)
+        ]
+        n_reads = n_writes = 0
+        latencies: List[float] = []
+        next_write = t0
+        while c.sim.now < t_end:
+            if c.sim.now >= next_write:
+                c.submit(f"SET key{n_writes % KV_KEYS} w{n_writes}", via=lead)
+                n_writes += 1
+                next_write += write_interval_ms
+            for cl in clients:
+                rid = cl["rid"]
+                if rid is not None:
+                    done_at = c.reads[rid]["completed_at"]
+                    if done_at is None:
+                        continue
+                    n_reads += 1
+                    latencies.append(done_at - c.reads[rid]["issued_at"])
+                cl["k"] = (cl["k"] + 1) % KV_KEYS
+                cl["rid"] = c.read(
+                    f"GET key{cl['k']}", via=cl["host"],
+                    mode=("replica" if mode == "replica" else "leader"),
+                )
+            # Poll at the node-tick cadence; sim time only advances when an
+            # event pops, so a sub-tick step could spin without progressing.
+            before = c.sim.now
+            c.run(10.0)
+            if c.sim.now <= before:
+                c.run(25.0)  # jump past the next heartbeat
+                assert c.sim.now > before, "simulation stalled"
+    finally:
+        lead_node.on_message = orig_on_message
+    assert c.leader() == lead, "leadership churned mid-measurement"
+    c.check_log_consistency()
+    elapsed_s = (c.sim.now - t0) / 1000.0
+    ctr = c.metrics.counters
+    return {
+        "hosts": float(n_hosts),
+        "clients": float(len(clients)),
+        "agg_reads_per_sec": n_reads / elapsed_s,
+        "mean_read_latency_ms": (
+            sum(latencies) / len(latencies) if latencies else float("inf")
+        ),
+        "reads": float(n_reads),
+        "writes": float(n_writes),
+        "leader_inbound_msgs": float(inbound["n"]),
+        "leader_msgs_per_read": inbound["n"] / max(n_reads, 1),
+        "replica_reads_served": float(ctr.get("replica_reads_served", 0)),
+        "read_probes": float(ctr.get("read_probes", 0)),
+    }
+
+
+def scale_out(smoke: bool = False) -> List[Dict]:
+    """The --scale-out sweep: replica-read throughput across 3/5/7/9 hosts
+    plus the 3-node leader-served baseline, with two assertions:
+
+    - aggregate read throughput grows near-linearly in hosts (9-host
+      replica mode >= 2x the 3-host replica mode on the ~99:1 mix);
+    - scaling out does not concentrate load: the leader's inbound messages
+      PER READ SERVED at 9 hosts stay within 1.2x of the 3-node
+      leader-served baseline (in practice far below it — replica reads
+      never touch the leader, so its traffic is replication only).
+    """
+    duration = 2000.0 if smoke else 4000.0
+    rows = []
+    base = scale_out_run(3, mode="leader", duration_ms=duration)
+    base.update(mode="leader_baseline")
+    rows.append(base)
+    sizes = (3, 9) if smoke else (3, 5, 7, 9)
+    by_size = {}
+    for n_hosts in sizes:
+        r = scale_out_run(n_hosts, mode="replica", duration_ms=duration)
+        r.update(mode="replica")
+        by_size[n_hosts] = r
+        rows.append(r)
+    print("mode,hosts,agg_reads_per_sec,mean_read_latency_ms,"
+          "leader_msgs_per_read,replica_reads_served")
+    for r in rows:
+        print(f"{r['mode']},{r['hosts']:.0f},{r['agg_reads_per_sec']:.0f},"
+              f"{r['mean_read_latency_ms']:.2f},"
+              f"{r['leader_msgs_per_read']:.2f},"
+              f"{r['replica_reads_served']:.0f}")
+    growth = (by_size[max(sizes)]["agg_reads_per_sec"]
+              / max(by_size[3]["agg_reads_per_sec"], 1e-9))
+    print(f"read throughput growth 3->{max(sizes)} hosts: {growth:.2f}x; "
+          f"leader msgs/read {by_size[max(sizes)]['leader_msgs_per_read']:.2f} "
+          f"(baseline {base['leader_msgs_per_read']:.2f})")
+    assert growth >= 2.0, (growth, by_size)
+    assert (by_size[max(sizes)]["leader_msgs_per_read"]
+            <= 1.2 * base["leader_msgs_per_read"]), (by_size, base)
+    # Replica mode must actually exercise the replica path.
+    assert by_size[max(sizes)]["replica_reads_served"] > 0, by_size
+    return rows
+
+
 def main(argv=None) -> List[Dict]:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI mode: fewer rounds, loss=0 only")
     ap.add_argument("--json", metavar="PATH",
                     help="write result rows as JSON (CI artifact)")
+    ap.add_argument("--scale-out", action="store_true",
+                    help="replica-read scale-out sweep (3/5/7/9 hosts) "
+                         "instead of the read-path ladder")
     args = ap.parse_args(argv)
+    if args.scale_out:
+        rows = scale_out(smoke=args.smoke)
+        if args.json:
+            os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=2)
+        return rows
     n_rounds = 4 if args.smoke else 10
     losses = (0.0,) if args.smoke else (0.0, 0.05, 0.1)
 

@@ -119,20 +119,47 @@ class SnapshotStore:
     def _hard_state_path(self, node_id: str) -> str:
         return os.path.join(self.dir, f"consensus_hard_{node_id}.json")
 
-    def save_hard_state(self, node_id: str, term: int, voted_for, seq: int) -> None:
+    def save_hard_state(
+        self,
+        node_id: str,
+        term: int,
+        voted_for,
+        seq: int,
+        floor_index: int = 0,
+        floor_term: int = 0,
+    ) -> None:
         tmp = self._hard_state_path(node_id) + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"term": term, "voted_for": voted_for, "seq": seq}, f)
+            json.dump(
+                {
+                    "term": term,
+                    "voted_for": voted_for,
+                    "seq": seq,
+                    # Acked-log floor: the store keeps no log, so a restored
+                    # node needs this to refuse electing candidates missing
+                    # entries it acknowledged before the crash.
+                    "floor_index": floor_index,
+                    "floor_term": floor_term,
+                },
+                f,
+            )
         os.replace(tmp, self._hard_state_path(node_id))
 
     def load_hard_state(self, node_id: str):
-        """Returns (term, voted_for, seq) or None."""
+        """Returns (term, voted_for, seq, floor_index, floor_term) or None.
+        Files written before the ack floor existed load with a zero floor."""
         path = self._hard_state_path(node_id)
         if not os.path.exists(path):
             return None
         with open(path) as f:
             payload = json.load(f)
-        return payload["term"], payload["voted_for"], payload["seq"]
+        return (
+            payload["term"],
+            payload["voted_for"],
+            payload["seq"],
+            payload.get("floor_index", 0),
+            payload.get("floor_term", 0),
+        )
 
 
 def _flatten_with_paths(tree: Params) -> List[Tuple[str, np.ndarray]]:

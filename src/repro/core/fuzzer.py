@@ -91,6 +91,12 @@ class FuzzProfile:
     snapshot_chunk_window: int = 2
     loss: float = 0.0
     jitter: float = 1.0
+    # Read-path knobs. BOTH must default to the pre-replica-read behavior
+    # (0.0 / False): from_dict fills missing keys with these defaults, so
+    # regression traces minted before the knobs existed must replay against
+    # the schedule they failed under, not today's.
+    read_coalesce_window: float = 0.0
+    election_noop: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -112,6 +118,8 @@ class FuzzProfile:
             snapshot_threshold=self.snapshot_threshold,
             snapshot_chunk_bytes=self.snapshot_chunk_bytes,
             snapshot_chunk_window=self.snapshot_chunk_window,
+            read_coalesce_window=self.read_coalesce_window,
+            election_noop=self.election_noop,
         )
 
 
@@ -258,7 +266,19 @@ class _TraceRunner:
         elif kind == "read":
             via = op.get("via")
             if via in c.nodes and c.nodes[via].alive:
-                c.read(f"GET {op.get('key', 'k0')}", via=via)
+                # Three flavors, all oracle-checked: "leader" (ReadIndex /
+                # lease; also every pre-replica-read trace, which carries
+                # no mode key), "replica" (watermark-linearizable at via),
+                # "stale" (replica with an explicit staleness bound).
+                mode = op.get("mode", "leader")
+                staleness = 0.0
+                if mode == "stale":
+                    mode = "replica"
+                    staleness = float(op.get("staleness_ms", 500.0))
+                c.read(
+                    f"GET {op.get('key', 'k0')}", via=via,
+                    mode=mode, max_staleness_ms=staleness,
+                )
         elif kind == "membership":
             self._apply_membership(op)
         # Unknown kinds are ignored (forward compatibility + shrink safety).
@@ -510,9 +530,19 @@ class ProtocolFuzzer:
                     }
                 )
             elif kind == "read":
-                ops.append(
-                    {"op": "read", "via": rng.choice(nodes), "key": f"k{rng.randint(0, 5)}"}
-                )
+                op = {
+                    "op": "read",
+                    "via": rng.choice(nodes),
+                    "key": f"k{rng.randint(0, 5)}",
+                }
+                roll = rng.random()
+                if roll < 0.35:
+                    op["mode"] = "replica"
+                elif roll < 0.55:
+                    op["mode"] = "stale"
+                    op["staleness_ms"] = rng.choice([100.0, 500.0, 2000.0])
+                # else: leader mode (no key — matches pre-replica traces)
+                ops.append(op)
             elif kind == "partition":
                 cut = rng.randint(1, max(1, len(nodes) - 1))
                 picks = rng.sample(nodes, cut)
@@ -570,6 +600,150 @@ class ProtocolFuzzer:
         return trace, replay(trace)
 
 
+# ------------------------------------------------------- hierarchy sweep
+
+
+def hierarchy_sweep(
+    seed: int, steps: int = 30, profile: Optional[FuzzProfile] = None
+) -> Tuple[Dict[str, Any], FuzzReport]:
+    """Seeded adversary sweep at the HIERARCHY level: three pods under one
+    simulation, driven through pod-leader crashes, intra-pod partitions,
+    global-link adversaries, pod writes and pod reads in all three modes
+    (leader / replica / bounded-stale), with the per-pod read + KV oracles
+    checked after every step and the cross-pod delivery oracle at the end.
+
+    Unlike :class:`ProtocolFuzzer` traces this is not ddmin-shrinkable
+    (the action log spans several coupled clusters); the log itself is the
+    artifact — it is returned (and saved by the CLI) so a failure replays
+    by re-running the seed."""
+    from repro.core.hierarchy import HierarchicalCluster
+    from tests.commit_history import check_kv_consistency, check_read_oracle
+
+    p = profile or FuzzProfile()
+    rng = random.Random(seed * 0x9E3779B1 + 13)
+    h = HierarchicalCluster(
+        n_pods=3, hosts_per_pod=3, seed=seed, config=p.raft_config(),
+        state_machine_factory=lambda nid: KVMachine(),
+    )
+    h.bootstrap()
+    actions: List[Dict[str, Any]] = []
+    writes: Dict[str, List[Tuple[EntryId, str]]] = {pod: [] for pod in h.pod_ids}
+    n_reads_checked = 0
+    wi = 0
+    ok, error, failed_at = True, "", -1
+
+    def live_hosts(pod: str) -> List[str]:
+        return [n for n, node in h.pods[pod].nodes.items() if node.alive]
+
+    kinds = [
+        "run", "run", "write", "write", "read", "read", "read",
+        "crash_leader", "restart_down", "isolate_host", "heal_pod",
+        "global_adversary", "global_adversary_off",
+    ]
+    try:
+        for step in range(steps):
+            pod = rng.choice(h.pod_ids)
+            local = h.pods[pod]
+            kind = rng.choice(kinds)
+            act: Dict[str, Any] = {"step": step, "op": kind, "pod": pod}
+            if kind == "run":
+                act["ms"] = rng.choice([200.0, 500.0, 1000.0])
+                h.run(act["ms"])
+            elif kind == "write":
+                hosts = live_hosts(pod)
+                if hosts:
+                    via = rng.choice(hosts)
+                    wi += 1
+                    cmd = f"SET hk{rng.randint(0, 4)} w{wi}"
+                    act.update(via=via, cmd=cmd)
+                    writes[pod].append((local.submit(cmd, via=via), cmd))
+            elif kind == "read":
+                roll = rng.random()
+                if roll < 0.4:
+                    mode, staleness, via = "leader", 0.0, None
+                elif roll < 0.75:
+                    mode, staleness, via = "replica", 0.0, None
+                else:
+                    mode = "replica"
+                    staleness = rng.choice([100.0, 500.0, 2000.0])
+                    via = None
+                act.update(mode=mode, staleness_ms=staleness)
+                h.read_pod(pod, f"GET hk{rng.randint(0, 4)}", via_host=via,
+                           mode=mode, max_staleness_ms=staleness)
+            elif kind == "crash_leader":
+                lead = local.leader()
+                if lead is not None:
+                    act["node"] = lead
+                    local.crash(lead)
+            elif kind == "restart_down":
+                for nid, node in local.nodes.items():
+                    if not node.alive:
+                        node.restart(h.sim.now)
+                        act.setdefault("nodes", []).append(nid)
+            elif kind == "isolate_host":
+                hosts = sorted(local.nodes)
+                victim = rng.choice(hosts)
+                act["node"] = victim
+                local.partition([victim], [n for n in hosts if n != victim])
+            elif kind == "heal_pod":
+                local.heal()
+            elif kind == "global_adversary":
+                act.update(drop=round(rng.uniform(0.0, 0.3), 3),
+                           ms=rng.choice([500.0, 1500.0]))
+                h.set_global_adversary(Adversary(
+                    seed=rng.randint(1, 2**30), drop_p=act["drop"],
+                    until=h.sim.now + act["ms"],
+                ))
+            elif kind == "global_adversary_off":
+                h.set_global_adversary(None)
+            actions.append(act)
+            for pd in h.pod_ids:
+                check_kv_consistency(h.pods[pd])
+                check_read_oracle(h.pods[pd], writes[pd])
+    except AssertionError as e:
+        ok, error, failed_at = False, f"step: {e}", len(actions) - 1
+    if ok:
+        try:
+            # Recovery: lift every fault, settle, and drain the read
+            # backlog. One leader-mode read per pod forces the lazy
+            # __noop__ barrier, which is also what re-certifies a
+            # watermark after leader churn on an idle pod — pending
+            # linearizable replica reads drain behind it.
+            h.set_global_adversary(None)
+            for pod in h.pod_ids:
+                local = h.pods[pod]
+                local.heal()
+                for nid, node in local.nodes.items():
+                    if not node.alive:
+                        node.restart(h.sim.now)
+            h.run(2_000)
+            for pod in h.pod_ids:
+                h.read_pod(pod, "GET __settle__")
+            h.run(8_000)
+            for pod in h.pod_ids:
+                check_kv_consistency(h.pods[pod])
+                n_reads_checked += check_read_oracle(h.pods[pod], writes[pod])
+            h.check_consistency()
+        except AssertionError as e:
+            ok, error = False, f"recovery: {e}"
+    n_commits = sum(
+        len(h.pods[pod].metrics.committed_at) for pod in h.pod_ids
+    )
+    report = FuzzReport(
+        ok=ok, error=error, failed_at_step=failed_at, n_ops=len(actions),
+        n_commits=n_commits, n_reads_checked=n_reads_checked,
+    )
+    artifact = {
+        "version": TRACE_VERSION,
+        "seed": seed,
+        "kind": "hierarchy_sweep",
+        "profile": p.to_dict(),
+        "actions": actions,
+        "error": error,
+    }
+    return artifact, report
+
+
 # ---------------------------------------------------------------------- CLI
 
 
@@ -592,14 +766,37 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="artifacts/fuzz", help="failing-trace dir")
     ap.add_argument("--no-shrink", action="store_true")
     ap.add_argument("--json", metavar="PATH", help="write run summary JSON")
+    ap.add_argument(
+        "--coalesce-window", type=float, default=0.0, metavar="MS",
+        help="run with RaftConfig.read_coalesce_window=MS (0 = off)",
+    )
+    ap.add_argument(
+        "--election-noop", action="store_true",
+        help="run with RaftConfig.election_noop (eager per-term barrier)",
+    )
+    ap.add_argument(
+        "--hierarchy", action="store_true",
+        help="run the hierarchy-level sweep (3 pods, pod-leader crashes, "
+        "intra-pod partitions, global-link adversaries, all read modes) "
+        "instead of flat-cluster trace fuzzing",
+    )
     args = ap.parse_args(argv)
 
+    profile = FuzzProfile(
+        read_coalesce_window=args.coalesce_window,
+        election_noop=args.election_noop,
+    )
     rows: List[Dict[str, Any]] = []
     failures = 0
     for seed in _parse_seeds(args.seeds):
-        fz = ProtocolFuzzer(seed, steps=args.steps)
         try:
-            trace, rep = fz.run()
+            if args.hierarchy:
+                trace, rep = hierarchy_sweep(
+                    seed, steps=args.steps, profile=profile
+                )
+            else:
+                fz = ProtocolFuzzer(seed, steps=args.steps, profile=profile)
+                trace, rep = fz.run()
         except Exception:  # an oracle escaped as a crash: still a failure
             failures += 1
             print(f"seed {seed}: CRASH\n{traceback.format_exc()}")
@@ -615,13 +812,14 @@ def main(argv=None) -> int:
         )
         if not rep.ok:
             failures += 1
-            if not args.no_shrink:
+            if not args.hierarchy and not args.no_shrink:
                 trace, used = shrink(trace)
                 print(
                     f"  shrunk to {len(trace['ops'])} ops in {used} replays; "
                     f"verdict: {replay(trace).error}"
                 )
-            path = os.path.join(args.out, f"seed{seed}.json")
+            name = ("hier-" if args.hierarchy else "") + f"seed{seed}.json"
+            path = os.path.join(args.out, name)
             save_trace(trace, path)
             print(f"  trace saved: {path}")
     if args.json:

@@ -164,6 +164,8 @@ class HierarchicalCluster:
         # Delivered global commands per pod (via local shadow entries).
         self.delivered: Dict[str, List[Any]] = {}
         self._delivered_keys: Dict[str, set] = {}
+        # Per-pod round-robin cursor for replica-read fan-out.
+        self._replica_rr: Dict[str, int] = {}
 
         # Local tiers: one Cluster per pod, sharing the one simulation.
         self.pods: Dict[str, Cluster] = {}
@@ -336,17 +338,64 @@ class HierarchicalCluster:
             return None
         return max(leaders, key=lambda p: self.global_nodes[p].term)
 
-    def read_pod(self, pod: str, query: Any, via_host: Optional[NodeId] = None) -> EntryId:
-        """Linearizable read served entirely INSIDE one pod: the query rides
-        the pod's local ReadIndex/lease path over fast intra-pod links and
-        never touches the global tier — the CD-Raft cross-domain-read
-        economy (cross-domain messages stay reserved for global commits).
-        Local-tier linearizability is exactly what the paper's hierarchy
-        offers: the pod's log IS the authority for pod-local state,
-        including down-propagated global shadow entries the pod has
-        committed. Returns the pod cluster's read id; the result lands in
+    def read_pod(
+        self,
+        pod: str,
+        query: Any,
+        via_host: Optional[NodeId] = None,
+        mode: str = "leader",
+        max_staleness_ms: float = 0.0,
+        retry_ms: Optional[float] = None,
+    ) -> EntryId:
+        """Read served entirely INSIDE one pod: the query rides the pod's
+        local read path over fast intra-pod links and never touches the
+        global tier — the CD-Raft cross-domain-read economy (cross-domain
+        messages stay reserved for global commits). Local-tier
+        linearizability is exactly what the paper's hierarchy offers: the
+        pod's log IS the authority for pod-local state, including
+        down-propagated global shadow entries the pod has committed.
+
+        ``mode="leader"`` terminates at the pod leader (ReadIndex/lease);
+        ``mode="replica"`` serves at a follower or learner from the pod
+        leader's certified watermark — with no ``via_host`` the read fans
+        out across the pod's non-leader replicas (learners first: they are
+        exactly the cheap read capacity ``add_pod_host``-style growth
+        buys, holding full state but costing no quorum). ``via_host``
+        naming a host the pod no longer has raises
+        :class:`~repro.core.sim.MembershipError`; a crashed host fails the
+        read fast unless ``retry_ms`` enables client-side failover.
+        Returns the pod cluster's read id; the result lands in
         ``self.pods[pod].reads``."""
-        return self.pods[pod].read(query, via=via_host)
+        local = self.pods[pod]
+        if via_host is None and mode == "replica":
+            via_host = self._pick_replica_host(pod)
+        return local.read(
+            query, via=via_host, mode=mode,
+            max_staleness_ms=max_staleness_ms, retry_ms=retry_ms,
+        )
+
+    def _pick_replica_host(self, pod: str) -> Optional[NodeId]:
+        """Round-robin read fan-out target inside a pod: live learners
+        first (read capacity with zero quorum cost), then live followers,
+        then whatever is left (the leader also serves replica reads)."""
+        local = self.pods[pod]
+        counter = self._replica_rr.get(pod, 0)
+        self._replica_rr[pod] = counter + 1
+        learners, followers, rest = [], [], []
+        for nid in sorted(local.nodes):
+            node = local.nodes[nid]
+            if not node.alive:
+                continue
+            if node.cluster_config.is_learner(nid):
+                learners.append(nid)
+            elif node.role.value != "leader":
+                followers.append(nid)
+            else:
+                rest.append(nid)
+        pool = learners or followers or rest
+        if not pool:
+            return None  # every host down; Cluster.read fails it fast
+        return pool[counter % len(pool)]
 
     def run_until_pod_reads(
         self, pod: str, read_ids, max_time: float = 30_000.0

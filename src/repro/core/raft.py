@@ -167,6 +167,14 @@ class RaftConfig:
     # behavior). Safety is unchanged — the shared probe is still sent at or
     # after every coalesced read arrived.
     read_coalesce_window: float = 0.0
+    # Append the current-term read-barrier no-op EAGERLY on winning an
+    # election (standard production-Raft behavior) instead of lazily at the
+    # first leader read. Off by default so seed-era deterministic schedules
+    # keep their exact commit histories; replica-read deployments turn it
+    # on — without a current-term commit a fresh leader can never certify a
+    # new read watermark, so on an idle cluster follower/learner reads
+    # issued after a leader change would stall until the next write.
+    election_noop: bool = False
 
 
 @dataclasses.dataclass
@@ -214,6 +222,28 @@ class _ClientRead:
     query: Any
     issued_at: float
     last_sent: float = -1.0e18
+
+
+@dataclasses.dataclass
+class _ReplicaRead:
+    """A read served LOCALLY at this node (follower, learner, or leader)
+    from the leader-published certified watermark — no leader round-trip.
+
+    ``max_staleness`` is the client's staleness contract in sim-ms: the
+    served state must reflect every write committed anywhere strictly
+    before ``issued_at - max_staleness``. 0 = linearizable (the read waits
+    for a watermark certified from a round sent at or after it was
+    issued). ``target_index`` latches to the watermark index the FIRST
+    time a fresh-enough watermark is adopted — without the latch a busy
+    cluster's ever-advancing watermark would starve the read behind
+    last_applied forever."""
+
+    read_id: Any
+    query: Any
+    issued_at: float
+    max_staleness: float
+    target_index: int = -1
+    wm_time: float = -1.0e18
 
 
 class RaftNode:
@@ -284,15 +314,26 @@ class RaftNode:
         self._batch_deadline = 0.0
         # Persistence hooks, wired by the harness (e.g. checkpoint.
         # SnapshotStore): snapshot_sink(node_id, snapshot) after each
-        # compaction; hard_state_sink(node_id, term, voted_for, seq)
-        # whenever Raft hard state changes — term/voted_for MUST be durable
-        # before acting on them (double-vote safety) and seq must never
-        # regress (EntryId dedup safety), so a host replacement restoring
-        # only persisted state stays correct.
+        # compaction; hard_state_sink(node_id, term, voted_for, seq,
+        # floor_index, floor_term) whenever Raft hard state changes —
+        # term/voted_for MUST be durable before acting on them (double-vote
+        # safety) and seq must never regress (EntryId dedup safety), so a
+        # host replacement restoring only persisted state stays correct.
         self.snapshot_sink: Optional[Callable[[NodeId, Snapshot], None]] = None
         self.hard_state_sink: Optional[
-            Callable[[NodeId, int, Optional[NodeId], int], None]
+            Callable[[NodeId, int, Optional[NodeId], int, int, int], None]
         ] = None
+        # Acked-log floor, persisted with the hard state: the highest
+        # (term, index) durable log position this node has ever acknowledged
+        # to a leader. The store does NOT persist the log itself, so a host
+        # restored from store comes back with entries it may have helped
+        # commit missing from its log; granting votes on that (empty) log
+        # would let a candidate win without those entries and overwrite a
+        # committed prefix. The floor makes the restored node refuse such
+        # grants (see _vote_floor_position). Tentative fast-track slots are
+        # excluded — they are vote-excluded by design and recovered through
+        # vote replies, not through up-to-dateness.
+        self._ack_floor: Tuple[int, int] = (0, 0)  # (term, index)
 
         # Candidate state.
         self.votes_received: Dict[NodeId, RequestVoteReply] = {}
@@ -330,12 +371,14 @@ class RaftNode:
         # Leader-side pending reads + the quorum-round/lease accounting.
         # _hb_round is a monotone round counter shared by heartbeat
         # broadcasts and ReadIndexProbes; _round_sent maps round -> (sim
-        # send time, local-clock send time); a quorum of echoes for round r
-        # confirms leadership as of r's send time.
+        # send time, local-clock send time, commit_index at send under the
+        # term barrier, else -1); a quorum of echoes for round r confirms
+        # leadership as of r's send time — which both renews the lease and
+        # certifies (commit-at-send, send-time) as a read watermark.
         self._reads_pending: List[_PendingRead] = []
         self._reads_pending_ids: set = set()
         self._hb_round = 0
-        self._round_sent: Dict[int, Tuple[float, float]] = {}
+        self._round_sent: Dict[int, Tuple[float, float, int]] = {}
         self._peer_acked_round: Dict[NodeId, int] = {}
         self._quorum_round = 0
         self._confirmed_sent_sim = -1.0e18   # sim send time of newest
@@ -346,6 +389,17 @@ class RaftNode:
         # Follower-side: last time a valid leader contacted us, for vote
         # stickiness under lease mode (see RaftConfig.lease_duration_ms).
         self._last_leader_contact = -1.0e18
+        # Replica-read state (ANY role): the newest certified watermark
+        # this node holds — adopted from current-term leader traffic
+        # (AppendEntries/probes), or self-certified in _note_round_ack when
+        # this node IS the leader — plus the reads waiting on it. The pair
+        # claims "every write committed anywhere strictly before sim time
+        # _wm_time has index <= _wm_index"; it is invalidated on every term
+        # bump (leader-change invalidation) and never survives a restart.
+        self._wm_index = -1
+        self._wm_time = -1.0e18
+        self._replica_reads: List[_ReplicaRead] = []
+        self._replica_read_ids: set = set()
         # Replies generated at points with no Outputs channel (e.g. reads
         # unblocked inside _advance_commit); drained by on_message/on_tick.
         self._outbox: Outputs = []
@@ -436,8 +490,20 @@ class RaftNode:
         return self._seq
 
     def _persist_hard_state(self) -> None:
+        # Fold the current durable log tip into the ack floor. Raft's
+        # up-to-dateness order (term, then index) keeps the floor monotone
+        # even across conflict truncations: an overwrite is always issued
+        # by a leader of a >= term, so the replacement tip never compares
+        # below a previously persisted floor it supersedes.
+        dp = self._durable_prefix()
+        tip = (self.term_at(dp), dp)
+        if tip > self._ack_floor:
+            self._ack_floor = tip
         if self.hard_state_sink is not None:
-            self.hard_state_sink(self.id, self.term, self.voted_for, self._seq)
+            self.hard_state_sink(
+                self.id, self.term, self.voted_for, self._seq,
+                self._ack_floor[1], self._ack_floor[0],
+            )
 
     def _seen(self, entry_id: EntryId) -> bool:
         """Has this EntryId been observed as a live log entry or an applied
@@ -486,6 +552,21 @@ class RaftNode:
         synchronously with apply, so commit_index stays exact there too)."""
         return self.commit_index
 
+    def _record_round(self, now: float) -> Tuple[float, float, int]:
+        """The per-round record (sim send time, local send time,
+        watermark-publishable commit index). The commit index is captured
+        at SEND time and only under the current-term read barrier: a
+        quorum echo of this round then proves (a) no rival leadership
+        existed before the send — the standard ReadIndex argument — and
+        (b) via the barrier, commit_index covered every prior-term commit.
+        Together: every write committed anywhere strictly before the send
+        time has index <= the recorded commit — a certifiable watermark."""
+        return (
+            now,
+            self.local_time(now),
+            self._read_index() if self._term_barrier_ok() else -1,
+        )
+
     # ------------------------------------------------------ election state
 
     def _reset_election_timer(self, now: float) -> None:
@@ -500,6 +581,14 @@ class RaftNode:
             self.term = term
             self.voted_for = None
             self._persist_hard_state()
+            # Leader-change invalidation: a term bump means a new
+            # leadership may exist; only watermarks certified (directly or
+            # transitively) in the NEW term may serve reads issued from
+            # here on. Pending replica reads keep an already-latched
+            # target_index — a certified watermark is a historical fact
+            # that no later leadership can falsify.
+            self._wm_index = -1
+            self._wm_time = -1.0e18
         self.role = Role.FOLLOWER
         self.votes_received = {}
         self._prevote_term = 0
@@ -584,6 +673,8 @@ class RaftNode:
         if self.metrics is not None:
             self.metrics.leader_elected(self.id, self.term)
         out = self._on_leadership_acquired(now)  # FastRaft hook (recovery)
+        if self.config.election_noop:
+            out += self._append_term_noop(now)
         out += self._flush_pending(now)
         return out + self._broadcast_append_entries(now)
 
@@ -634,7 +725,7 @@ class RaftNode:
         if msg.term > self.term and not self._vote_is_disruptive(
             msg.candidate_id, now, prevote=True
         ):
-            lli, llt = self._election_log_position()
+            lli, llt = self._vote_floor_position()
             grant = (msg.last_log_term, msg.last_log_index) >= (llt, lli)
         # Granting records nothing and resets no timer: a pre-vote is a
         # prediction, not a promise.
@@ -723,6 +814,21 @@ class RaftNode:
         """
         return self.last_log_index(), self.term_at(self.last_log_index())
 
+    def _vote_floor_position(self) -> Tuple[int, int]:
+        """(last_log_index, last_log_term) a candidate must reach for OUR
+        vote: the election log position raised to the persisted ack floor.
+
+        Only the GRANT side uses this. A campaigning node always advertises
+        its real log (_election_log_position) — folding the floor into the
+        advertisement would let a store-restored node claim entries it does
+        not hold and win an election it cannot safely lead.
+        """
+        lli, llt = self._election_log_position()
+        ft, fi = self._ack_floor
+        if (ft, fi) > (llt, lli):
+            return fi, ft
+        return lli, llt
+
     def _tentative_tail(self) -> Optional[dict]:
         return None  # FastRaft hook
 
@@ -764,8 +870,7 @@ class RaftNode:
             if self.role is Role.LEADER and now >= self.next_heartbeat:
                 self.next_heartbeat = now + self.config.heartbeat_interval
                 out += self._broadcast_append_entries(now)
-            # Coalesced-read probe: one confirmation round for every read
-            # buffered inside the window.
+            # Coalesced-read window close: serve or confirm the batch.
             if (
                 self.role is Role.LEADER
                 and self._probe_deadline > 0.0
@@ -773,7 +878,19 @@ class RaftNode:
             ):
                 self._probe_deadline = 0.0
                 if self._reads_pending and self.peers():
-                    out += self._send_read_probe(now)
+                    # The lease MUST be re-validated HERE, at serve time —
+                    # never trusted from admission time. A batch whose lease
+                    # was (or went) dead inside the window falls back to a
+                    # full ReadIndexProbe round; a batch whose lease is live
+                    # NOW serves with zero rounds (each pending read arrived
+                    # at or before now, so applied state at now is a valid
+                    # linearization point for all of them).
+                    if self._term_barrier_ok() and self._lease_valid(now):
+                        out += self._serve_ready_reads(
+                            now, confirmed_at=now, count_as="lease_reads"
+                        )
+                    if self._reads_pending:
+                        out += self._send_read_probe(now)
         elif now >= self.election_deadline:
             # Learners and removed members never campaign: they are not in
             # any voter set, so an election they start could only disrupt.
@@ -800,6 +917,11 @@ class RaftNode:
                     if cr.last_sent > -1.0e17:
                         self._count("read_retries")
                     out += self._route_read(rid, now)
+        # Replica reads re-check on ticks too: the leader-singleton
+        # watermark (commit_index, now) advances with time alone, and a
+        # role change can make previously-blocked reads servable.
+        if self._replica_reads:
+            out += self._serve_replica_reads(now)
         return self._drain_outbox(out)
 
     def _drain_outbox(self, out: Outputs) -> Outputs:
@@ -849,7 +971,7 @@ class RaftNode:
         ):
             if msg.term > self.term:
                 self._become_follower(msg.term, now)
-            lli, llt = self._election_log_position()
+            lli, llt = self._vote_floor_position()
             up_to_date = (msg.last_log_term, msg.last_log_index) >= (llt, lli)
             if up_to_date and self.voted_for in (None, msg.candidate_id):
                 grant = True
@@ -886,7 +1008,7 @@ class RaftNode:
         lease / confirms pending ReadIndex reads (see _note_round_ack).
         """
         self._hb_round += 1
-        self._round_sent[self._hb_round] = (now, self.local_time(now))
+        self._round_sent[self._hb_round] = self._record_round(now)
         if len(self._round_sent) > 1024:
             # A leader cut off from its quorum keeps broadcasting; dropping
             # the oldest unconfirmed rounds only delays a (doomed) lease
@@ -918,6 +1040,8 @@ class RaftNode:
             entries=(),
             leader_commit=self.commit_index,
             hb_id=self._hb_round,
+            read_wm=self._wm_index,
+            read_wm_ts=self._wm_time,
         )
 
     def _replicate_to_peer(self, peer: NodeId) -> Outputs:
@@ -951,6 +1075,8 @@ class RaftNode:
                         # (earlier) broadcast time, which only SHORTENS the
                         # lease this ack can grant — the safe direction.
                         hb_id=self._hb_round,
+                        read_wm=self._wm_index,
+                        read_wm_ts=self._wm_time,
                     ),
                 )
             )
@@ -1048,6 +1174,7 @@ class RaftNode:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
         self._note_leader_contact(now)
+        self._adopt_watermark(msg.read_wm, msg.read_wm_ts, now)
         deferred: Outputs = self._flush_pending(now) if first_leader_contact else []
 
         # Consistency check. Tentative slots don't count as matching history:
@@ -1070,6 +1197,7 @@ class RaftNode:
                     )
                 ]
         # Append / overwrite.
+        log_mutated = False
         for k, incoming in enumerate(msg.entries):
             idx = msg.prev_log_index + 1 + k
             if idx <= self.snapshot_last_index:
@@ -1079,12 +1207,18 @@ class RaftNode:
                 # Matching entry: possibly upgrade state (tentative->classic).
                 if cur.state is SlotState.TENTATIVE:
                     cur.state = incoming.state
+                    log_mutated = True
                 continue
             if cur is not None:
                 # Conflict: truncate from idx (Raft rule), after notifying.
                 self._on_slot_overwritten(idx, cur, incoming)
                 self._truncate_from(idx)
             self._append_slot(incoming.clone())
+            log_mutated = True
+        if log_mutated:
+            # The success reply below acks these entries into the leader's
+            # commit quorum: the ack floor must be durable before it leaves.
+            self._persist_hard_state()
         if msg.leader_commit > self.commit_index:
             self._advance_commit(min(msg.leader_commit, self._durable_prefix()), now)
         reply = AppendEntriesReply(
@@ -1224,18 +1358,51 @@ class RaftNode:
 
     # ----------------------------------------------- linearizable read path
 
-    def client_read(self, query: Any, now: float, read_id: Any = None) -> Outputs:
-        """Entry point for a linearizable read submitted at this node.
+    def client_read(
+        self,
+        query: Any,
+        now: float,
+        read_id: Any = None,
+        mode: str = "leader",
+        max_staleness_ms: float = 0.0,
+    ) -> Outputs:
+        """Entry point for a read submitted at this node.
 
-        The read never touches the log: it is routed to the leader, which
-        serves it from its local state machine after proving it is still
-        the leader — one ReadIndexProbe quorum round, or zero rounds under
-        a fresh heartbeat-quorum lease. Completion is delivered through
-        ``read_done_fn(read_id, result)``."""
+        ``mode="leader"`` (default): linearizable via the leader. The read
+        never touches the log: it is routed to the leader, which serves it
+        from its local state machine after proving it is still the leader —
+        one ReadIndexProbe quorum round, or zero rounds under a fresh
+        heartbeat-quorum lease.
+
+        ``mode="replica"``: served LOCALLY at this node (follower, learner,
+        or leader) from the leader-published certified watermark — zero
+        messages to the leader, which is the whole read scale-out story.
+        With ``max_staleness_ms == 0`` the read is linearizable (waits for
+        a watermark certified at or after issue — about two heartbeat
+        intervals of latency); with ``max_staleness_ms > 0`` it serves as
+        soon as a watermark within the staleness bound is held, trading an
+        explicit bounded-staleness contract for latency: the result
+        reflects every write committed before ``now - max_staleness_ms``.
+
+        Completion is delivered through ``read_done_fn(read_id, result)``."""
         if not self.alive:
             return []
         if read_id is None:
             read_id = EntryId(f"{self.id}/read", self.next_seq())
+        if mode == "replica":
+            if read_id in self._replica_read_ids:
+                return []  # duplicate client retry
+            self._replica_read_ids.add(read_id)
+            self._replica_reads.append(
+                _ReplicaRead(
+                    read_id=read_id,
+                    query=query,
+                    issued_at=now,
+                    max_staleness=max(0.0, max_staleness_ms),
+                )
+            )
+            self._count("replica_reads_submitted")
+            return self._drain_outbox(self._serve_replica_reads(now))
         if read_id in self._reads_inflight:
             return []  # duplicate client retry
         self._reads_inflight[read_id] = _ClientRead(query=query, issued_at=now)
@@ -1367,9 +1534,10 @@ class RaftNode:
         covered by the next heartbeat round (sent after the read arrived,
         so its quorum confirms the read too)."""
         self._hb_round += 1
-        self._round_sent[self._hb_round] = (now, self.local_time(now))
+        self._round_sent[self._hb_round] = self._record_round(now)
         probe = ReadIndexProbe(term=self.term, src=self.id, leader_id=self.id,
-                               probe_id=self._hb_round)
+                               probe_id=self._hb_round,
+                               read_wm=self._wm_index, read_wm_ts=self._wm_time)
         out: Outputs = [(p, probe) for p in self.peers()]
         self._count("read_probes")
         self._count("msgs_out", len(out))
@@ -1392,6 +1560,7 @@ class RaftNode:
             self._become_follower(msg.term, now)
         self._reset_election_timer(now)
         self._note_leader_contact(now)
+        self._adopt_watermark(msg.read_wm, msg.read_wm_ts, now)
         return [
             (
                 msg.src,
@@ -1437,36 +1606,53 @@ class RaftNode:
         if q <= self._quorum_round or q not in self._round_sent:
             return []  # no progress, or a stale echo from pruned history
         self._quorum_round = q
-        sent_sim, sent_local = self._round_sent[q]
+        sent_sim, sent_local, commit_pub = self._round_sent[q]
         self._confirmed_sent_sim = sent_sim
         span = self._lease_span()
         if span > 0:
             self._lease_expiry_local = max(
                 self._lease_expiry_local, sent_local + span
             )
+        # Quorum confirmation CERTIFIES the round's watermark: the commit
+        # index captured at send (under the term barrier) now provably
+        # covers everything committed before the send time. The leader
+        # adopts it for its own replica-mode reads and publishes it on
+        # every subsequent heartbeat/probe.
+        if commit_pub >= 0 and sent_sim > self._wm_time:
+            self._wm_index = commit_pub
+            self._wm_time = sent_sim
+            self._count("wm_certified")
         for r in [r for r in self._round_sent if r < q]:
             del self._round_sent[r]
-        return self._serve_ready_reads(now)
+        return self._serve_ready_reads(now) + self._serve_replica_reads(now)
 
-    def _serve_ready_reads(self, now: float) -> Outputs:
+    def _serve_ready_reads(
+        self,
+        now: float,
+        confirmed_at: Optional[float] = None,
+        count_as: str = "readindex_reads",
+    ) -> Outputs:
         """Serve every pending read whose confirmation round was sent at or
         after it arrived, once the read barrier holds and the read index is
         applied. Called from ack paths and (via the outbox) from
         _advance_commit, so fast-track merges and barrier commits release
-        waiting reads immediately."""
+        waiting reads immediately. ``confirmed_at`` overrides the
+        quorum-round confirmation time — the coalesce-window lease serve
+        passes ``now`` after re-validating the lease at serve time."""
         if not self._reads_pending or self.role is not Role.LEADER:
             return []
         if not self._term_barrier_ok():
             return []
-        confirmed_at = self._confirmed_sent_sim
-        if self.cluster_config.commit_ok({self.id}):
-            confirmed_at = now  # self IS every quorum (singleton group)
+        if confirmed_at is None:
+            confirmed_at = self._confirmed_sent_sim
+            if self.cluster_config.commit_ok({self.id}):
+                confirmed_at = now  # self IS every quorum (singleton group)
         served: List[_PendingRead] = []
         keep: List[_PendingRead] = []
         for r in self._reads_pending:
             if confirmed_at >= r.arrived_at and self.last_applied >= r.read_index:
                 self._reads_pending_ids.discard(r.read_id)
-                self._count("readindex_reads")
+                self._count(count_as)
                 served.append(r)
             else:
                 keep.append(r)
@@ -1523,6 +1709,75 @@ class RaftNode:
             )
         ]
 
+    # ------------------------------------------- replica (watermark) reads
+
+    def _adopt_watermark(self, wm: int, wm_ts: float, now: float) -> None:
+        """Adopt a leader-published certified watermark. Callers are the
+        valid-leader-contact points (AppendEntries / probe handlers) AFTER
+        the term check, so ``msg.term == self.term`` here — a deposed
+        leader's stale watermark can never reach this (its message carries
+        a lower term and is rejected, or a higher term already bumped us
+        and cleared the watermark). Adoption is monotone on certify time;
+        the watermark survives snapshot jumps untouched (it is a lower
+        bound on the committed prefix, and an installed snapshot only ever
+        advances our applied prefix)."""
+        if wm < 0 or wm_ts <= self._wm_time:
+            return
+        self._wm_index = wm
+        self._wm_time = wm_ts
+        if self._replica_reads:
+            self._outbox += self._serve_replica_reads(now)
+
+    def _serve_replica_reads(self, now: float) -> Outputs:
+        """Serve pending replica-mode reads from local applied state.
+
+        A read serves once (a) a certified watermark fresh enough for its
+        staleness contract is held — certify time >= issue time minus the
+        staleness bound — and (b) ``last_applied`` has reached the
+        watermark index latched when (a) first held. Everything is local:
+        no message ever leaves this node for a replica read."""
+        if not self._replica_reads:
+            return []
+        wm_i, wm_t = self._wm_index, self._wm_time
+        if (
+            self.role is Role.LEADER
+            and self._term_barrier_ok()
+            and self.cluster_config.commit_ok({self.id})
+        ):
+            # Singleton voter set: self IS every quorum, so the current
+            # commit index is trivially certified as of now.
+            wm_i, wm_t = self._read_index(), now
+        keep: List[_ReplicaRead] = []
+        for r in self._replica_reads:
+            if r.target_index < 0 and wm_i >= 0 and wm_t >= r.issued_at - r.max_staleness:
+                r.target_index = wm_i
+                r.wm_time = wm_t
+            if 0 <= r.target_index <= self.last_applied:
+                self._replica_read_ids.discard(r.read_id)
+                self._count(
+                    "replica_reads_served" if r.max_staleness <= 0.0
+                    else "stale_reads_served"
+                )
+                value = self.state_machine.query(r.query)
+                self._count("reads_served")
+                if self.read_done_fn is not None:
+                    self.read_done_fn(
+                        r.read_id,
+                        {
+                            "ok": True,
+                            "value": value,
+                            "served_index": self.last_applied,
+                            "mode": "replica",
+                            "staleness_ms": r.max_staleness,
+                            "wm_index": r.target_index,
+                            "wm_time": r.wm_time,
+                        },
+                    )
+            else:
+                keep.append(r)
+        self._replica_reads = keep
+        return []
+
     def _leader_append(self, command: Any, entry_id: EntryId, now: float) -> Outputs:
         return self._leader_append_many([(command, entry_id)], now)
 
@@ -1568,6 +1823,9 @@ class RaftNode:
             appended = True
         if not appended:
             return []
+        # The leader counts its own log in the commit quorum — its append IS
+        # an ack, so the floor goes durable with it.
+        self._persist_hard_state()
         # Replicate immediately (don't wait for the heartbeat).
         return self._broadcast_append_entries(now)
 
@@ -1637,6 +1895,10 @@ class RaftNode:
         # replies leave via the outbox.
         if self.role is Role.LEADER and self._reads_pending:
             self._outbox += self._serve_ready_reads(now)
+        # Apply progress is also what a replica read with a latched
+        # watermark target waits for (any role).
+        if self._replica_reads:
+            self._outbox += self._serve_replica_reads(now)
 
     # ---------------------------------------------------- snapshot/compaction
 
@@ -1689,17 +1951,28 @@ class RaftNode:
         # authoritative value comes from restore_hard_state (seqs burned
         # after the last compaction are not in the snapshot).
         self._seq = max(self._seq, self._dedup.max_seq(self.id))
+        if (snap.last_term, snap.last_index) > self._ack_floor:
+            self._ack_floor = (snap.last_term, snap.last_index)
 
     def restore_hard_state(
-        self, term: int, voted_for: Optional[NodeId], seq: int
+        self,
+        term: int,
+        voted_for: Optional[NodeId],
+        seq: int,
+        floor_index: int = 0,
+        floor_term: int = 0,
     ) -> None:
         """Adopt persisted Raft hard state on a cold start. Without this a
         replaced node could double-vote in a term it already voted in, or
-        mint EntryIds that collide with ones it burned before the crash."""
+        mint EntryIds that collide with ones it burned before the crash.
+        The ack floor keeps it from electing candidates that lack entries
+        it acked before the crash (the log itself is not in the store)."""
         if term >= self.term:
             self.term = term
             self.voted_for = voted_for
         self._seq = max(self._seq, seq)
+        if (floor_term, floor_index) > self._ack_floor:
+            self._ack_floor = (floor_term, floor_index)
 
     def _install_snapshot(self, snap: Snapshot, now: float) -> None:
         """Follower-side InstallSnapshot: adopt the leader's compacted prefix.
@@ -1734,6 +2007,13 @@ class RaftNode:
         }
         self._rebuild_config_log_from(snap)
         self._count("snapshots_installed")
+        # A snapshot jump can move last_applied past a replica read's
+        # latched watermark target in one step — the snapshot-jump case of
+        # the watermark protocol. The watermark itself needs no adjustment:
+        # it lower-bounds the committed prefix, and the jump only advanced
+        # our view of that prefix.
+        if self._replica_reads:
+            self._outbox += self._serve_replica_reads(now)
 
     def _handle_InstallSnapshotArgs(self, msg: InstallSnapshotArgs, now: float) -> Outputs:
         if msg.term < self.term or msg.snapshot is None:
@@ -2177,6 +2457,12 @@ class RaftNode:
         self._reads_inflight = {}
         self._reads_pending = []
         self._reads_pending_ids = set()
+        # The watermark is volatile by design: a restarted node re-adopts
+        # from current-term leader traffic before serving replica reads.
+        self._wm_index = -1
+        self._wm_time = -1.0e18
+        self._replica_reads = []
+        self._replica_read_ids = set()
         self._round_sent = {}
         self._peer_acked_round = {}
         self._quorum_round = 0

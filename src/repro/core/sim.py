@@ -444,13 +444,39 @@ class Cluster:
         self.dispatch(via, node.client_request_batch(pairs, self.sim.now))
         return [eid for _, eid in pairs]
 
-    def read(self, query, via: Optional[NodeId] = None) -> EntryId:
-        """Submit a linearizable read at ``via``: it forwards to the leader
-        and is served from applied state after a ReadIndex confirmation
-        round (or zero rounds under a leader lease) — it never rides the
-        log. Returns a read id; the outcome lands in ``self.reads`` (see
+    def read(
+        self,
+        query,
+        via: Optional[NodeId] = None,
+        mode: str = "leader",
+        max_staleness_ms: float = 0.0,
+        retry_ms: Optional[float] = None,
+    ) -> EntryId:
+        """Submit a read at ``via``.
+
+        ``mode="leader"`` (default): linearizable via the leader — the read
+        forwards there and is served from applied state after a ReadIndex
+        confirmation round (or zero rounds under a leader lease); it never
+        rides the log. ``mode="replica"``: served locally AT ``via`` (any
+        follower/learner/leader) from the leader-published certified
+        watermark, with ``max_staleness_ms`` as the staleness contract
+        (0 = linearizable).
+
+        Targeting a host that was removed from the cluster raises
+        :class:`MembershipError`; targeting a crashed host fails the read
+        fast (``ok=False, error="host down"``) instead of letting it hang
+        until some deadline with no signal. ``retry_ms`` turns both cases
+        (and any other stall) into client-side failover: every ``retry_ms``
+        sim-ms an uncompleted read is re-issued at the next live host,
+        cycling through the membership once before giving up.
+
+        Returns a read id; the outcome lands in ``self.reads`` (see
         :meth:`read_value` / :meth:`run_until_reads`)."""
         via = via or next(iter(self.nodes))
+        if via not in self.nodes:
+            raise MembershipError(
+                f"read via {via!r}: not a cluster member (removed or never added)"
+            )
         node = self.nodes[via]
         self._read_counter += 1
         # Cluster-scoped id stream: never collides with write EntryIds and
@@ -459,14 +485,73 @@ class Cluster:
         self.reads[rid] = {
             "query": query,
             "via": via,
+            "mode": mode,
+            "staleness_ms": max_staleness_ms if mode == "replica" else 0.0,
             "issued_at": self.sim.now,
             "ok": None,
             "value": None,
             "served_index": None,
             "completed_at": None,
+            "error": None,
+            "attempts": [via],
         }
-        self.dispatch(via, node.client_read(query, self.sim.now, read_id=rid))
+        if not node.alive and retry_ms is None:
+            rec = self.reads[rid]
+            rec["ok"] = False
+            rec["error"] = f"host down: {via}"
+            rec["completed_at"] = self.sim.now
+            return rid
+        if node.alive:
+            self.dispatch(
+                via,
+                node.client_read(
+                    query, self.sim.now, read_id=rid,
+                    mode=mode, max_staleness_ms=max_staleness_ms,
+                ),
+            )
+        if retry_ms is not None and retry_ms > 0:
+            self._schedule_read_failover(rid, retry_ms)
         return rid
+
+    def _schedule_read_failover(self, rid: EntryId, retry_ms: float) -> None:
+        """Client-side retry/failover loop for one read: while uncompleted,
+        re-issue the (idempotent) query at the next live host every
+        ``retry_ms``. One full cycle through the membership without a
+        completion fails the read with a clear reason."""
+
+        def poll() -> None:
+            rec = self.reads.get(rid)
+            if rec is None or rec["completed_at"] is not None:
+                return
+            hosts = sorted(self.nodes)
+            if len(rec["attempts"]) > len(hosts):
+                rec["ok"] = False
+                rec["error"] = "read failover exhausted: no host completed it"
+                rec["completed_at"] = self.sim.now
+                return
+            # Next host after the last attempt, round-robin over the
+            # current membership (live hosts only).
+            last = rec["attempts"][-1]
+            start = (hosts.index(last) + 1) if last in hosts else 0
+            target = None
+            for i in range(len(hosts)):
+                cand = hosts[(start + i) % len(hosts)]
+                if self.nodes[cand].alive:
+                    target = cand
+                    break
+            if target is not None:
+                rec["attempts"].append(target)
+                self.metrics.count("read_client_failovers")
+                self.dispatch(
+                    target,
+                    self.nodes[target].client_read(
+                        rec["query"], self.sim.now, read_id=rid,
+                        mode=rec["mode"], max_staleness_ms=rec["staleness_ms"],
+                    ),
+                )
+            self.sim.schedule(retry_ms, poll)
+
+        self.sim.schedule(retry_ms, poll)
 
     def _read_completed(self, read_id, result: Dict) -> None:
         rec = self.reads.get(read_id)
@@ -476,6 +561,11 @@ class Cluster:
         rec["value"] = result.get("value")
         rec["served_index"] = result.get("served_index")
         rec["completed_at"] = self.sim.now
+        # Replica-read certification metadata (the oracle's watermark-
+        # safety check keys off these; leader-served reads carry none).
+        for k in ("wm_index", "wm_time"):
+            if k in result:
+                rec[k] = result[k]
 
     def read_value(self, read_id: EntryId):
         return self.reads[read_id]["value"]

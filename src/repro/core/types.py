@@ -428,6 +428,18 @@ class AppendEntriesArgs(Message):
     # leader was still recognized no earlier than r's send time — the lease
     # basis. 0 = untagged (pre-lease peers / replies to stale leaders).
     hb_id: int = 0
+    # Certified read watermark riding every heartbeat/replication round —
+    # the replica-read protocol. (read_wm, read_wm_ts) is the leader's
+    # newest QUORUM-CONFIRMED claim: "every write committed anywhere
+    # strictly before sim time read_wm_ts has index <= read_wm". The claim
+    # is minted in _note_round_ack — read_wm is the leader's commit_index
+    # captured when round q was SENT (under the current-term read barrier),
+    # and the quorum echo of q proves no rival leadership existed before
+    # q's send time — so a follower/learner can serve reads at index
+    # read_wm with NO leader round-trip. read_wm < 0 = no certified
+    # watermark yet (fresh leader pre-barrier, or pre-watermark peer).
+    read_wm: int = -1
+    read_wm_ts: float = -1.0e18
 
 
 @dataclasses.dataclass
@@ -557,10 +569,15 @@ class ReadIndexProbe(Message):
     and heartbeat acks share one quorum/lease accounting path. A follower
     that acks a probe also resets its election timer — the promise the
     leader-lease safety argument rests on (no new leader sooner than
-    election_timeout_min after the ack)."""
+    election_timeout_min after the ack). Probes carry the certified read
+    watermark too (same semantics as ``AppendEntriesArgs.read_wm``) so a
+    read-heavy leader publishes watermarks at probe cadence, not just at
+    heartbeat cadence."""
 
     leader_id: NodeId = ""
     probe_id: int = 0
+    read_wm: int = -1
+    read_wm_ts: float = -1.0e18
 
 
 @dataclasses.dataclass

@@ -141,9 +141,20 @@ def check_read_oracle(cluster, writes) -> int:
     exact across compaction):
 
     * freshness — every write to the read's key that was ACKED (observably
-      committed) strictly before the read was ISSUED has
-      ``committed_index <= served_index``: a linearizable read may never
-      miss a write the client could already know about;
+      committed) strictly before the read's FRESHNESS FLOOR has
+      ``committed_index <= served_index``. For linearizable reads (leader
+      path, and replica reads with ``staleness_ms == 0``) the floor is the
+      issue time: a linearizable read may never miss a write the client
+      could already know about. For bounded-stale replica reads the floor
+      is ``issued_at - staleness_ms`` — exactly the contract
+      ``max_staleness_ms`` sells: writes acked inside the staleness window
+      are allowed to be missing, anything older is not;
+    * watermark safety — a replica-served read carries the certified
+      watermark it served under (``wm_index``/``wm_time``); every write
+      acked strictly before the watermark's certify time must sit at or
+      below the watermark index, and the served prefix must cover the
+      watermark. A leader that published a watermark above its
+      commit coverage at certify time fails here;
     * validity — the returned value equals the replay of ALL committed
       writes to that key up to ``served_index`` in index order (a read must
       return some consistent prefix state, not a value from a parallel
@@ -174,7 +185,28 @@ def check_read_oracle(cluster, writes) -> int:
         key = q.split(" ")[1]
         served = rec["served_index"]
         issued = rec["issued_at"]
+        # The freshness floor: linearizable reads must see everything acked
+        # before issue; bounded-stale replica reads are allowed to miss
+        # writes acked inside their staleness window, nothing older.
+        floor = issued - float(rec.get("staleness_ms") or 0.0)
         assert served is not None, f"read {rid} completed without served_index"
+        wm_time = rec.get("wm_time")
+        if wm_time is not None:
+            wm_index = rec.get("wm_index")
+            assert wm_index is not None and served >= wm_index, (
+                f"READ {rid} served index {served} below its own certified "
+                f"watermark {wm_index}"
+            )
+            for idx, t_commit, parts in committed:
+                # Watermark safety: the certified claim is "every write
+                # committed anywhere strictly before wm_time has index <=
+                # wm_index". A violation means the leader published a
+                # watermark above its commit coverage at certify time.
+                assert not (t_commit < wm_time and idx > wm_index), (
+                    f"UNSAFE WATERMARK for read {rid}: ({wm_index}, "
+                    f"t={wm_time}) certified, but write {' '.join(parts)} "
+                    f"committed at index {idx}, t={t_commit}"
+                )
         expected = None
         for idx, t_commit, parts in committed:
             if parts[1] != key:
@@ -183,11 +215,13 @@ def check_read_oracle(cluster, writes) -> int:
                 expected = _replay_kv(expected, parts)
             else:
                 # Not included in the served prefix: it must not have been
-                # acked before the read was issued.
-                assert t_commit >= issued, (
+                # acked before the read's freshness floor.
+                assert t_commit >= floor, (
                     f"STALE READ {rid}: '{q}' served at index {served} "
                     f"missed write {' '.join(parts)} (index {idx}) acked at "
-                    f"t={t_commit} before the read was issued at t={issued}"
+                    f"t={t_commit} before the read's freshness floor "
+                    f"t={floor} (issued {issued}, staleness bound "
+                    f"{rec.get('staleness_ms', 0.0)})"
                 )
         assert rec["value"] == expected, (
             f"READ VALUE MISMATCH {rid}: '{q}' at served_index {served} "

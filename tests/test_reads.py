@@ -22,7 +22,7 @@ import random
 import pytest
 
 from repro.core.raft import RaftConfig
-from repro.core.sim import Cluster
+from repro.core.sim import Cluster, MembershipError
 from repro.core.statemachine import KVMachine
 from repro.core.hierarchy import HierarchicalCluster
 
@@ -363,6 +363,300 @@ def test_pipelined_faster_than_serial_at_zero_loss():
     assert pipelined < serial, (serial, pipelined)
 
 
+# ------------------------------------------- replica (watermark) reads
+
+
+def test_replica_read_serves_locally_zero_leader_rounds():
+    """A follower serves a linearizable replica read from the published
+    watermark: correct value, no forward to the leader, no probe round."""
+    c = _mk(seed=23)
+    lead = c.leader()
+    writes = []
+    eid = c.submit("SET r rho", via=lead)
+    writes.append((eid, "SET r rho"))
+    assert c.run_until_committed([eid])
+    c.run(200)  # a post-commit round certifies + publishes the watermark
+    probes = c.metrics.counters.get("read_probes", 0)
+    forwards = c.metrics.counters.get("read_forwards", 0)
+    followers = [n for n in c.nodes if n != lead][:2]
+    rids = [c.read("GET r", via=f, mode="replica") for f in followers]
+    assert c.run_until_reads(rids, 10_000)
+    for r in rids:
+        assert c.reads[r]["value"] == "rho"
+        assert c.reads[r]["wm_index"] is not None
+    # Zero leader involvement: no probes, no forwards beyond the baseline.
+    assert c.metrics.counters.get("read_probes", 0) == probes
+    assert c.metrics.counters.get("read_forwards", 0) == forwards
+    assert c.metrics.counters.get("replica_reads_served", 0) >= 2
+    assert check_read_oracle(c, writes) == 2
+
+
+def test_replica_read_via_learner():
+    """A learner (non-voting, full replication) is first-class replica-read
+    capacity — exactly the scale-out story."""
+    c = _mk(seed=24)
+    c.add_learner("l0")
+    assert c.run_until_membership()
+    lead = c.leader()
+    writes = []
+    eid = c.submit("SET lk learned", via=lead)
+    writes.append((eid, "SET lk learned"))
+    assert c.run_until_committed([eid])
+    rid = c.read("GET lk", via="l0", mode="replica")
+    assert c.run_until_reads([rid], 15_000)
+    assert c.reads[rid]["value"] == "learned"
+    assert c.nodes["l0"].cluster_config.is_learner("l0")
+    check_read_oracle(c, writes)
+
+
+def test_replica_read_partitioned_replica_blocks_until_heal():
+    """A partitioned follower holds no fresh-enough watermark, so a
+    linearizable replica read pends rather than serving stale state; on
+    heal it serves the write that committed DURING the partition.
+
+    pre_vote keeps the rejoining victim from deposing the healthy leader
+    (an idle-cluster leader change would otherwise leave no certified
+    watermark until the next write — that edge has its own test)."""
+    c = _mk(seed=25, config=RaftConfig(pre_vote=True))
+    lead = c.leader()
+    writes = []
+    e1 = c.submit("SET p v1", via=lead)
+    writes.append((e1, "SET p v1"))
+    assert c.run_until_committed([e1])
+    c.run(200)
+    victim = [n for n in c.nodes if n != lead][0]
+    c.partition([victim], [n for n in c.nodes if n != victim])
+    c.run(100)
+    e2 = c.submit("SET p v2", via=lead)
+    writes.append((e2, "SET p v2"))
+    assert c.run_until_committed([e2], 30_000)
+    rid = c.read("GET p", via=victim, mode="replica")
+    c.run(2_000)
+    assert c.reads[rid]["completed_at"] is None, (
+        "partitioned replica served a linearizable read on a stale watermark"
+    )
+    c.heal()
+    assert c.run_until_reads([rid], 30_000)
+    assert c.reads[rid]["value"] == "v2"
+    check_read_oracle(c, writes)
+
+
+def test_replica_read_across_snapshot_jump():
+    """InstallSnapshot advances last_applied past individually-applied
+    entries; the watermark target must be satisfied by the jump (a snapshot
+    is a prefix of the committed log, so it can only help freshness)."""
+    cfg = RaftConfig(snapshot_threshold=16)
+    c = Cluster(n=3, protocol="fastraft", seed=26, config=cfg,
+                state_machine_factory=kv_factory)
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    lead = c.leader()
+    victim = [n for n in c.nodes if n != lead][0]
+    c.partition([victim], [n for n in c.nodes if n != victim])
+    c.crash(victim)
+    writes = []
+    for i in range(40):
+        cmd = f"SET s v{i}"
+        writes.append((c.submit(cmd, via=lead), cmd))
+    assert c.run_until_committed([e for e, _ in writes], 120_000)
+    c.run(500)  # leader auto-compacts past the threshold
+    c.heal()
+    c.restart(victim)
+    rid = c.read("GET s", via=victim, mode="replica")
+    assert c.run_until_reads([rid], 60_000)
+    assert c.reads[rid]["value"] == "v39"
+    assert c.metrics.counters.get("snapshots_installed", 0) >= 1
+    check_read_oracle(c, writes)
+
+
+def test_replica_read_after_leader_change_idle_cluster():
+    """Leader churn invalidates the watermark (the old leader may have
+    certified under leadership it since lost). With election_noop the new
+    leader's barrier commit re-certifies on an IDLE cluster — no write
+    traffic needed for replica reads to resume."""
+    cfg = RaftConfig(election_noop=True)
+    c = Cluster(n=5, protocol="fastraft", seed=27, config=cfg,
+                state_machine_factory=kv_factory)
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    lead = c.leader()
+    writes = []
+    eid = c.submit("SET lc v1", via=lead)
+    writes.append((eid, "SET lc v1"))
+    assert c.run_until_committed([eid])
+    c.run(200)
+    c.crash(lead)
+    new_lead = c.run_until_leader(60_000)
+    assert new_lead is not None and new_lead != lead
+    # No writes since the crash: only the election no-op re-certifies.
+    replica = [n for n in c.nodes if n not in (lead, new_lead)][0]
+    rid = c.read("GET lc", via=replica, mode="replica")
+    assert c.run_until_reads([rid], 30_000)
+    assert c.reads[rid]["value"] == "v1"
+    check_read_oracle(c, writes)
+
+
+def test_bounded_staleness_contract():
+    """max_staleness_ms > 0: a partitioned replica may serve from an aged
+    watermark WITHIN the bound (missing a newer write is allowed by the
+    contract) but a linearizable read at the same replica must block.
+    pre_vote: the rejoining victim must not depose the idle leader."""
+    c = _mk(seed=28, config=RaftConfig(pre_vote=True))
+    lead = c.leader()
+    writes = []
+    e1 = c.submit("SET bs old", via=lead)
+    writes.append((e1, "SET bs old"))
+    assert c.run_until_committed([e1])
+    c.run(300)
+    victim = [n for n in c.nodes if n != lead][0]
+    c.partition([victim], [n for n in c.nodes if n != victim])
+    c.run(100)
+    e2 = c.submit("SET bs new", via=lead)
+    writes.append((e2, "SET bs new"))
+    assert c.run_until_committed([e2], 30_000)
+    # Bounded-stale read: the pre-partition watermark is within 60s.
+    r_stale = c.read("GET bs", via=victim, mode="replica",
+                     max_staleness_ms=60_000.0)
+    c.run(500)
+    assert c.reads[r_stale]["completed_at"] is not None
+    assert c.reads[r_stale]["value"] == "old"  # within contract
+    assert c.metrics.counters.get("stale_reads_served", 0) >= 1
+    # Linearizable read at the same partitioned replica: blocks.
+    r_lin = c.read("GET bs", via=victim, mode="replica")
+    c.run(1_500)
+    assert c.reads[r_lin]["completed_at"] is None
+    c.heal()
+    assert c.run_until_reads([r_lin], 30_000)
+    assert c.reads[r_lin]["value"] == "new"
+    check_read_oracle(c, writes)
+
+
+# --------------------------------- coalesce window x lease expiry (edges)
+
+
+def test_coalesced_reads_never_served_under_dead_lease():
+    """A leader whose lease dies while reads sit in the coalesce window
+    must fall back to the probe round — which cannot confirm across the
+    partition — so the reads complete only after failover, reflecting the
+    write the NEW leader committed meanwhile."""
+    cfg = RaftConfig(lease_duration_ms=800.0, clock_skew_ms=10.0,
+                     read_coalesce_window=200.0)
+    c = Cluster(n=5, protocol="fastraft", seed=29, config=cfg,
+                state_machine_factory=kv_factory)
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    lead = c.leader()
+    writes = []
+    e1 = c.submit("SET cw before", via=lead)
+    writes.append((e1, "SET cw before"))
+    assert c.run_until_committed([e1])
+    minority = [lead, [n for n in c.nodes if n != lead][0]]
+    c.partition(minority, [n for n in c.nodes if n not in minority])
+    c.run(400)  # lease (capped at election_timeout_min) expires
+    rid = c.read("GET cw", via=lead)
+    c.run(1_000)
+    assert c.reads[rid]["completed_at"] is None, (
+        "coalesced read served under a dead lease"
+    )
+    new_lead = c.leader()
+    assert new_lead not in minority
+    e2 = c.submit("SET cw after", via=new_lead)
+    writes.append((e2, "SET cw after"))
+    assert c.run_until_committed([e2], 30_000)
+    c.heal()
+    assert c.run_until_reads([rid], 30_000)
+    assert c.reads[rid]["value"] == "after"
+    check_read_oracle(c, writes)
+
+
+def test_coalesce_window_close_revalidates_live_lease():
+    """The window-close fast path: a read admitted while a confirmation
+    round was in flight (lease momentarily expired) is lease-served at
+    window close — the round's ack revalidated the lease — with no extra
+    probe. The lease check happens AT SERVE TIME, never at admission."""
+    cfg = RaftConfig(heartbeat_interval=400.0, election_timeout_min=1200.0,
+                     election_timeout_max=1600.0, lease_duration_ms=200.0,
+                     read_coalesce_window=50.0)
+    c = Cluster(n=3, protocol="fastraft", seed=30, config=cfg,
+                base_latency=12.0, state_machine_factory=kv_factory)
+    assert c.run_until_leader(60_000) is not None
+    lead = c.leader()
+    eid = c.submit("SET cv val", via=lead)
+    assert c.run_until_committed([eid], 30_000)
+    node = c.nodes[lead]
+    # Catch the race: a heartbeat round in flight (acks pending), lease
+    # currently dead. lease span (200ms) < heartbeat interval (400ms)
+    # guarantees a dead zone before every round; base_latency (12ms one
+    # way) keeps the round's acks in flight across tick boundaries. The
+    # round must have been sent STRICTLY before the read arrives — a
+    # same-instant round would confirm the read the ordinary ReadIndex
+    # way and never exercise the window-close path.
+    caught = None
+    for _ in range(2_000):
+        c.run(10)
+        assert c.leader() == lead
+        if (node._hb_round > node._quorum_round
+                and node._round_sent.get(node._hb_round, (c.sim.now,))[0]
+                < c.sim.now
+                and not node._lease_valid(c.sim.now)
+                and node._term_barrier_ok()):
+            rid = c.read("GET cv", via=lead)
+            if c.reads[rid]["completed_at"] is None and node._reads_pending:
+                caught = rid
+                break
+    assert caught is not None, "never caught a round-in-flight dead lease"
+    probes = c.metrics.counters.get("read_probes", 0)
+    lease_reads = c.metrics.counters.get("lease_reads", 0)
+    assert c.run_until_reads([caught], 5_000)
+    assert c.reads[caught]["value"] == "val"
+    # Served by the revalidated lease at window close: no probe round.
+    assert c.metrics.counters.get("read_probes", 0) == probes
+    assert c.metrics.counters.get("lease_reads", 0) == lease_reads + 1
+
+
+# ------------------------------------------- read targeting (via= edges)
+
+
+def test_read_via_removed_host_raises_membership_error():
+    c = _mk(seed=32)
+    lead = c.leader()
+    gone = [n for n in c.nodes if n != lead][0]
+    c.remove_node(gone, pop=True)
+    assert c.run_until_membership()
+    with pytest.raises(MembershipError):
+        c.read("GET x", via=gone)
+    with pytest.raises(MembershipError):
+        c.read("GET x", via="never-existed")
+
+
+def test_read_via_crashed_host_fails_fast():
+    c = _mk(seed=33)
+    lead = c.leader()
+    down = [n for n in c.nodes if n != lead][0]
+    c.crash(down)
+    t0 = c.sim.now
+    rid = c.read("GET x", via=down)
+    rec = c.reads[rid]
+    assert rec["ok"] is False
+    assert rec["error"] == f"host down: {down}"
+    assert rec["completed_at"] == t0  # failed immediately, no silent hang
+
+
+def test_read_retry_fails_over_to_live_host():
+    c = _mk(seed=34)
+    lead = c.leader()
+    eid = c.submit("SET fo live", via=lead)
+    assert c.run_until_committed([eid])
+    down = [n for n in c.nodes if n != lead][0]
+    c.crash(down)
+    rid = c.read("GET fo", via=down, retry_ms=100.0)
+    assert c.run_until_reads([rid], 30_000)
+    rec = c.reads[rid]
+    assert rec["ok"] and rec["value"] == "live"
+    assert len(rec["attempts"]) > 1
+    assert c.metrics.counters.get("read_client_failovers", 0) >= 1
+
+
 # --------------------------------------------------------------- hierarchy
 
 
@@ -386,3 +680,33 @@ def test_hierarchy_pod_local_reads_no_global_traffic():
         p: n.commit_index for p, n in h.global_nodes.items()
     } == global_commits_before
     h.check_consistency()
+
+
+def test_hierarchy_replica_reads_and_removed_host():
+    """read_pod(mode="replica") fans out across the pod's non-leader
+    replicas; targeting a host the pod no longer has raises
+    MembershipError instead of silently hanging."""
+    h = HierarchicalCluster(n_pods=2, hosts_per_pod=3, seed=7,
+                            state_machine_factory=kv_factory)
+    h.bootstrap()
+    pod = h.pod_ids[0]
+    local = h.pods[pod]
+    lead = local.leader()
+    eid = local.submit("SET rk replicated", via=lead)
+    assert local.run_until_committed([eid], 30_000)
+    local.run(300)
+    rids = [h.read_pod(pod, "GET rk", mode="replica") for _ in range(3)]
+    assert h.run_until_pod_reads(pod, rids, 30_000)
+    for r in rids:
+        rec = local.reads[r]
+        assert rec["value"] == "replicated"
+        assert rec["via"] != lead  # fanned out to a non-leader replica
+    # A dead replica host fails the read fast with a clear reason.
+    down = [n for n in local.nodes if n != lead][0]
+    local.crash(down)
+    rid = h.read_pod(pod, "GET rk", via_host=down)
+    assert local.reads[rid]["ok"] is False
+    assert local.reads[rid]["error"] == f"host down: {down}"
+    # A host that was never pod membership raises, not hangs.
+    with pytest.raises(MembershipError):
+        h.read_pod(pod, "GET rk", via_host="no-such-host")

@@ -25,6 +25,17 @@ behavior we never want to regress:
   per-entry relay RPCs that raced through link jitter, breaking
   single-batch FIFO (observed commit order [4, 3, 1, 2]); the flush now
   rides one relay RPC.
+* ``restore_lost_acked_log`` — minted by the read-enabled fuzzer (shrunk
+  from seed 7): ``restart_from_store`` restores hard state + snapshot but
+  NOT the log, so a node that had acked entries into a commit quorum came
+  back empty-logged and elected a candidate missing them (observed: a
+  term-barrier noop overwriting committed index 4). The persisted
+  acked-log floor now makes the restored node refuse such vote grants.
+* ``coalesced_read_dead_lease`` — a coalesced leader read admitted after
+  the leader's lease died behind a partition (CheckQuorum off, a rival
+  quorum having already committed a newer value) must fall back to a
+  ReadIndexProbe at window close — never serve the stale local state —
+  and completes with the rival's value only after the heal.
 
 Promoting a new fuzzer find is one step: copy the shrunk trace the CI
 artifact (or ``python -m repro.core.fuzzer``) produced into this directory.
