@@ -1,0 +1,260 @@
+"""Simulator throughput: simulated-events/sec and wall-clock for the
+canonical workload matrix, so sim speed is a tracked perf number alongside
+the protocol benchmarks.
+
+Workloads (``--smoke`` runs scaled-down versions of each):
+
+* ``steady-N`` (N in 3/9/33): open-loop paced commit traffic plus reads —
+  the flat-cluster shape every protocol benchmark uses.
+* ``loss-9-P``: the steady workload across a packet-loss sweep (retransmit
+  and election pressure as loss climbs).
+* ``fuzz-33``: a 33-node fuzz-profile chaos workload — partition a minority,
+  commit through the retained quorum, heal, and let the laggards catch up,
+  with idle stretches between cycles (the shape of a real fuzz trace). Runs
+  under BOTH engines and reports the slotted-over-legacy speedup: legacy
+  re-scans the durable prefix per commit advance and re-sorts quorum state
+  per reply, which is quadratic in trace length, so this is where the
+  engine rewrite pays.
+* ``chaos-100``: a 100-node, million-event chaos trace (partitions, a
+  crashed host per cycle, catch-up, idle) — the CI-scale target: it must
+  finish in well under a minute for 100x-bigger experiments to be routine.
+
+``--json PATH`` writes the row list for the perf-trajectory artifact;
+``--check`` enforces floors (events/sec, chaos-100 wall, fuzz-33 speedup)
+and exits non-zero on regression.
+
+Schedules are engine-independent (see tests/test_sim_equivalence.py), so
+the two engines of ``fuzz-33`` retire identical event streams — the wall
+ratio is pure engine cost, not workload drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster
+from repro.core.statemachine import KVMachine
+
+
+def _fuzz_profile_config(max_batch_entries: int = 16,
+                         snapshot_threshold: int = 0) -> RaftConfig:
+    """The stock fuzz-profile knobs (fuzzer.FuzzProfile) minus snapshotting:
+    long uncompacted logs are the regime the BlackWater-scale directions
+    need, and exactly where per-advance full-log scans blow up."""
+    return RaftConfig(
+        pre_vote=True, check_quorum=True,
+        lease_duration_ms=120.0, clock_skew_ms=20.0,
+        max_batch_entries=max_batch_entries,
+        snapshot_threshold=snapshot_threshold,
+    )
+
+
+def _row(name: str, c: Cluster, wall: float, engine: str,
+         n_ops: int, **extra) -> Dict[str, float]:
+    ev = c.sim.events
+    r = {
+        "name": name, "n": len(c.nodes), "engine": engine,
+        "events": ev, "wall_s": round(wall, 4),
+        "events_per_sec": round(ev / wall) if wall > 0 else 0,
+        "sim_ms": round(c.sim.now, 1), "n_ops": n_ops,
+    }
+    r.update(extra)
+    return r
+
+
+def steady(n: int, steps: int, engine: str = "slotted", seed: int = 3,
+           loss: float = 0.01, link_rng: str = "shared") -> Dict[str, float]:
+    """Open-loop paced load: one command per 100 sim-ms through rotating
+    nodes, a read every fifth step — the standard benchmark shape."""
+    c = Cluster(n=n, protocol="fastraft", seed=seed, loss=loss, jitter=1.0,
+                config=_fuzz_profile_config(snapshot_threshold=12),
+                state_machine_factory=lambda nid: KVMachine(),
+                clock_drift=0.0001, engine=engine, link_rng=link_rng)
+    c.run_until_leader(60_000)
+    nids = list(c.nodes)
+    t0 = time.perf_counter()
+    t_target = c.sim.now
+    for i in range(steps):
+        c.submit_batch([f"k{i}=v{i}"], via=nids[i % n])
+        if i % 5 == 0:
+            lead = c.leader()
+            if lead:
+                c.read("k0", via=lead)
+        t_target += 100.0
+        c.sim.run_until(t_target)
+    wall = time.perf_counter() - t0
+    name = f"steady-{n}" if loss == 0.01 else f"loss-{n}-{loss:g}"
+    if link_rng != "shared":
+        name += f"-{link_rng}"
+    return _row(name, c, wall, engine, steps, loss=loss)
+
+
+def fuzz_33(engine: str, cycles: int, waves: int = 20,
+            seed: int = 11) -> Dict[str, float]:
+    """Fuzz-profile chaos: partition 11 of 33 followers away, keep
+    committing through the 22-node quorum, heal, catch the laggards up,
+    idle, repeat. Long logs + deep catch-up debt is the quadratic regime
+    for the legacy engine."""
+    c = Cluster(n=33, protocol="raft", seed=seed, loss=0.01, jitter=1.0,
+                config=_fuzz_profile_config(),
+                state_machine_factory=lambda nid: KVMachine(),
+                clock_skew_ms=20.0, clock_drift=0.0001, engine=engine)
+    c.run_until_leader(60_000)
+    nids = list(c.nodes)
+    writes: List = []
+    t0 = time.perf_counter()
+    for cyc in range(cycles):
+        lead = c.leader() or c.run_until_leader(60_000)
+        minority = [x for x in nids[cyc % 3 :: 3] if x != lead][:11]
+        c.partition([x for x in nids if x not in minority], minority)
+        for w in range(waves):
+            writes.extend(c.submit_batch(
+                [f"c{cyc}w{w}k{j}=v" for j in range(25)], via=lead))
+            c.run_until_committed(writes, 30_000)
+        c.heal()
+        c.run(1500.0)
+        ok = c.run_until_committed(writes, 60_000)
+        assert ok, f"fuzz-33 cycle {cyc} failed to converge"
+        c.run(3000.0)
+    wall = time.perf_counter() - t0
+    c.check_log_consistency()
+    return _row("fuzz-33", c, wall, engine, len(writes))
+
+
+def chaos_100(cycles: int, seed: int = 42) -> Dict[str, float]:
+    """The CI-scale target: 100 nodes, ~58k events per chaos cycle
+    (partition + crash + commit waves + heal + catch-up + idle)."""
+    c = Cluster(n=100, protocol="raft", seed=seed, loss=0.02, jitter=2.0,
+                config=_fuzz_profile_config(max_batch_entries=32,
+                                            snapshot_threshold=500),
+                state_machine_factory=lambda nid: KVMachine(),
+                clock_skew_ms=20.0, clock_drift=0.0001, engine="slotted")
+    c.run_until_leader(60_000)
+    nids = list(c.nodes)
+    writes: List = []
+    t0 = time.perf_counter()
+    for cyc in range(cycles):
+        lead = c.leader() or c.run_until_leader(60_000)
+        minority = [x for x in nids[cyc % 5 :: 5] if x != lead][:33]
+        c.partition([x for x in nids if x not in minority], minority)
+        crashed = next(x for x in nids if x != lead and x not in minority)
+        c.crash(crashed)
+        for w in range(15):
+            writes.extend(c.submit_batch(
+                [f"c{cyc}w{w}k{j}=v" for j in range(20)], via=lead))
+            c.run_until_committed(writes, 30_000)
+        c.restart(crashed)
+        c.heal()
+        c.run(1500.0)
+        ok = c.run_until_committed(writes, 60_000)
+        assert ok, f"chaos-100 cycle {cyc} failed to converge"
+        c.run(2000.0)
+    wall = time.perf_counter() - t0
+    c.check_log_consistency()
+    return _row("chaos-100", c, wall, "slotted", len(writes))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down workloads for the CI lane")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write benchmark rows as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="enforce perf floors; non-zero exit on regression")
+    args = ap.parse_args()
+    smoke = args.smoke
+
+    rows: List[Dict[str, float]] = []
+    failures: List[str] = []
+
+    # Conservative floors: shared CI runners are several times slower than
+    # a quiet dev box (local slotted rates: ~60-120k events/sec).
+    floor_events_per_sec = 10_000
+    floor_speedup = 2.0 if smoke else 10.0
+
+    steps = 30 if smoke else 80
+    print("== steady state ==")
+    for n in ((3, 9) if smoke else (3, 9, 33)):
+        r = steady(n, steps)
+        rows.append(r)
+        print(f"  {r['name']:>16}: {r['events_per_sec']:>8,} ev/s "
+              f"({r['events']:,} events in {r['wall_s']:.2f}s)")
+
+    print("== loss sweep (n=9) ==")
+    for loss in ((0.1,) if smoke else (0.0, 0.05, 0.2)):
+        r = steady(9, steps, loss=loss)
+        rows.append(r)
+        print(f"  {r['name']:>16}: {r['events_per_sec']:>8,} ev/s "
+              f"({r['events']:,} events in {r['wall_s']:.2f}s)")
+
+    if not smoke:
+        # Vectorized per-(src,dst) link RNG (numpy batched draws): a
+        # different-but-deterministic schedule, so a perf row only.
+        r = steady(33, steps, link_rng="vectorized")
+        rows.append(r)
+        print(f"  {r['name']:>16}: {r['events_per_sec']:>8,} ev/s")
+
+    print("== fuzz-33 (engine comparison, identical schedules) ==")
+    cycles, waves = (1, 8) if smoke else (10, 20)
+    slotted = fuzz_33("slotted", cycles, waves)
+    legacy = fuzz_33("legacy", cycles, waves)
+    if slotted["events"] != legacy["events"] or slotted["sim_ms"] != legacy["sim_ms"]:
+        failures.append(
+            f"fuzz-33 schedules diverged: slotted {slotted['events']} events"
+            f"/{slotted['sim_ms']}ms vs legacy {legacy['events']}"
+            f"/{legacy['sim_ms']}ms")
+    speedup = legacy["wall_s"] / slotted["wall_s"] if slotted["wall_s"] else 0.0
+    rows += [slotted, legacy,
+             {"name": "fuzz-33-speedup", "speedup": round(speedup, 2),
+              "slotted_wall_s": slotted["wall_s"],
+              "legacy_wall_s": legacy["wall_s"],
+              "events": slotted["events"]}]
+    for r in (slotted, legacy):
+        print(f"  {r['engine']:>8}: {r['wall_s']:6.2f}s "
+              f"({r['events']:,} events, {r['events_per_sec']:,} ev/s)")
+    print(f"  speedup: {speedup:.1f}x")
+
+    print("== chaos-100 ==")
+    r = chaos_100(2 if smoke else 18)
+    rows.append(r)
+    print(f"  {r['events']:,} events, {r['n_ops']:,} client ops in "
+          f"{r['wall_s']:.2f}s ({r['events_per_sec']:,} ev/s)")
+
+    if args.check:
+        for row in rows:
+            if row.get("engine") == "slotted" and \
+                    row.get("events_per_sec", 0) < floor_events_per_sec:
+                failures.append(
+                    f"{row['name']}: {row['events_per_sec']:,} ev/s below "
+                    f"floor {floor_events_per_sec:,}")
+        if speedup < floor_speedup:
+            failures.append(
+                f"fuzz-33 speedup {speedup:.1f}x below floor "
+                f"{floor_speedup:.1f}x")
+        if not smoke and r["wall_s"] >= 60.0:
+            failures.append(f"chaos-100 took {r['wall_s']:.1f}s (>= 60s)")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
+
+    if failures:
+        print("PERF CHECK FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    if args.check:
+        print("perf floors ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,7 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
         loss: float = 0.01, proposers: str = "single", batch: bool = False,
         msg_overhead: float = MSG_OVERHEAD,
         workload: str = "append", read_ratio: float = 0.0,
-        lease: bool = False) -> Dict[str, float]:
+        lease: bool = False, batch_window=0.0) -> Dict[str, float]:
     """proposers="single": one non-leader client (largely non-conflicting —
     the regime where the paper's fast track wins). "all": every non-leader
     proposes at the same instant — deliberate slot collisions, measuring the
@@ -50,7 +50,11 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
     into linearizable GETs on the read path (``Cluster.read``: ReadIndex,
     or zero-round leases with ``lease=True``) — reads stop consuming log
     slots and replication bandwidth, which is exactly what the read
-    subsystem buys over GET-as-log-entry."""
+    subsystem buys over GET-as-log-entry.
+
+    batch_window: leader-side coalescing delay in sim-ms, or the string
+    "adaptive" to enable RaftConfig.adaptive_batch_window (the leader
+    derives the window from the observed submit arrival rate)."""
     factory: Optional[object] = None
     snapshot_threshold = 0
     if workload == "kv":
@@ -59,7 +63,10 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
     assert read_ratio == 0.0 or workload == "kv", "read_ratio needs --workload kv"
     config = RaftConfig(max_batch_entries=max(burst, 1), max_inflight_batches=4,
                         snapshot_threshold=snapshot_threshold,
-                        lease_duration_ms=10_000.0 if lease else 0.0)
+                        lease_duration_ms=10_000.0 if lease else 0.0,
+                        batch_window=(0.0 if batch_window == "adaptive"
+                                      else float(batch_window)),
+                        adaptive_batch_window=batch_window == "adaptive")
     c = Cluster(n=5, protocol=protocol, seed=seed, loss=loss,
                 base_latency=5.0, jitter=1.0, msg_overhead=msg_overhead,
                 config=config, state_machine_factory=factory)
@@ -128,6 +135,52 @@ def run(protocol: str, burst: int, n_bursts: int = 5, seed: int = 3,
     }
 
 
+def paced_run(batch_window, gap_ms: float, n_ops: int = 300, seed: int = 3,
+              protocol: str = "raft") -> Dict[str, float]:
+    """Open-loop paced load straight at the leader: one command every
+    ``gap_ms`` of simulated time. This is the regime where the leader-side
+    batch window is the ONLY coalescing in play (no client-side
+    submit_batch, no fast-track bypass), so it isolates what the window
+    buys: fewer RPCs (each charged ``msg_overhead``) against the latency
+    cost of holding commands back. Returns messages-per-commit and mean
+    commit latency; ``cost`` is their product — the network-cost x latency
+    frontier a window tuner is trying to minimize."""
+    config = RaftConfig(max_batch_entries=64, max_inflight_batches=4,
+                        batch_window=(0.0 if batch_window == "adaptive"
+                                      else float(batch_window)),
+                        adaptive_batch_window=batch_window == "adaptive")
+    c = Cluster(n=5, protocol=protocol, seed=seed, loss=0.0,
+                base_latency=5.0, jitter=1.0, msg_overhead=MSG_OVERHEAD,
+                config=config)
+    c.run_until_leader(60_000)
+    c.run(1000)
+    lead = c.leader()
+    msgs_before = c.metrics.counters.get("msgs_out", 0)
+    eids = []
+    # Pace against an absolute clock: Simulation.now only advances when an
+    # event fires, so run(gap_ms) from an unchanged `now` would re-request
+    # the same window forever and collapse the pacing into one instant.
+    t_next = c.sim.now
+    for i in range(n_ops):
+        eids.append(c.submit(f"p{i}", via=lead))
+        t_next += gap_ms
+        c.sim.run_until(t_next)
+    c.run_until_committed(eids, 120_000)
+    c.check_log_consistency()
+    n_committed = sum(
+        1 for e in eids
+        if c.metrics.traces.get(e) is not None and c.metrics.traces[e].committed
+    )
+    msgs = (c.metrics.counters.get("msgs_out", 0) - msgs_before) / max(n_committed, 1)
+    lat = c.metrics.mean_latency() or float("nan")
+    return {
+        "msgs_per_commit": msgs,
+        "mean_latency": lat,
+        "cost": msgs * lat,
+        "committed": float(n_committed),
+    }
+
+
 def batching_speedup(protocol: str = "fastraft", burst: int = 64,
                      seed: int = 3, n_bursts: int = 5) -> Dict[str, float]:
     """Headline number: batched vs unbatched ops/sec at loss=0 on the same
@@ -187,6 +240,42 @@ def main(argv=None) -> List[Dict]:
         r.update(protocol="fastraft-kv-read" + ("-lease" if lease else ""),
                  burst=16, proposers="single", batch=False)
         rows.append(r)
+    # Leader-side coalescing: static batch_window sweep vs adaptive
+    # auto-tuning (RaftConfig.adaptive_batch_window) across arrival-rate
+    # regimes. No single static window is right for every rate — a dense
+    # stream wants a wide window (message economy), a sparse one wants none
+    # (pure latency) — so each config is scored by the geometric mean over
+    # regimes of msgs_per_commit * mean_latency. The adaptive row must
+    # match or beat the best static on that score without anyone picking a
+    # window by hand.
+    import math
+    n_paced = 60 if smoke else 300
+    rates = ((0.5, "dense"), (30.0, "sparse")) if smoke else (
+        (0.5, "dense"), (2.0, "medium"), (30.0, "sparse"))
+    windows = (0.0, 5.0, "adaptive") if smoke else (0.0, 2.0, 5.0, 20.0, "adaptive")
+    scores: Dict = {}
+    for w in windows:
+        label = "adaptive" if w == "adaptive" else f"{w:g}ms"
+        costs = []
+        for gap, regime in rates:
+            r = paced_run(w, gap, n_ops=n_paced)
+            costs.append(r["cost"])
+            r.update(protocol=f"window-{label}-{regime}", burst=0,
+                     proposers="single", batch=False, gap_ms=gap,
+                     ops_per_sec=1000.0 / gap, fast_share=0.0)
+            rows.append(r)
+        scores[label] = math.prod(costs) ** (1.0 / len(costs))
+    best_static = min(v for k, v in scores.items() if k != "adaptive")
+    print("window tuning (geomean msgs_per_commit x latency; lower is better):")
+    for label, v in scores.items():
+        print(f"  {label}: {v:.1f}")
+    print(f"adaptive batch_window: {scores['adaptive']:.1f} vs best static "
+          f"{best_static:.1f} ({best_static / max(scores['adaptive'], 1e-9):.2f}x headroom)")
+    rows.append({"protocol": "window_tuning", "proposers": "single", "burst": 0,
+                 "batch": True, "ops_per_sec": 0.0, "fast_share": 0.0,
+                 "mean_latency": 0.0, "adaptive_score": scores["adaptive"],
+                 "best_static_score": best_static,
+                 **{f"score_{k}": v for k, v in scores.items()}})
     print("protocol,proposers,burst,batch,ops_per_sec,fast_share,mean_latency_ms")
     for r in rows:
         print(f"{r['protocol']},{r['proposers']},{r['burst']},{int(r['batch'])},"

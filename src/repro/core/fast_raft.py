@@ -86,7 +86,7 @@ from repro.core.types import (
 )
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _InflightProposal:
     index: int
     command: Any
@@ -95,7 +95,7 @@ class _InflightProposal:
     fell_back: bool = False
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _SlotTally:
     """Leader-side vote accounting for one fast-track slot."""
 
@@ -490,6 +490,15 @@ class FastRaftNode(RaftNode):
         return i
 
     # --------------------------------------------------------------- ticks
+
+    def _protocol_idle(self) -> bool:
+        # _tick_protocol below is a no-op exactly when there are no leader
+        # tallies, no held finalizations, and no proposer inflight state.
+        return (
+            not self.inflight
+            and not self.tallies
+            and not self._finalized_held
+        )
 
     def _tick_protocol(self, now: float) -> Outputs:
         out: Outputs = []

@@ -172,9 +172,14 @@ def load_trace(path: str) -> Dict[str, Any]:
     return trace
 
 
-def replay_trace_file(path: str) -> FuzzReport:
-    """THE regression entry point: replay a saved trace standalone."""
-    return replay(load_trace(path))
+def replay_trace_file(path: str, engine: str = "slotted") -> FuzzReport:
+    """THE regression entry point: replay a saved trace standalone.
+
+    ``engine`` selects the simulator event engine ("slotted" or "legacy");
+    both produce byte-identical schedules, so a trace minted under either
+    replays identically under the other (tests/test_sim_equivalence.py
+    gates this)."""
+    return replay(load_trace(path), engine=engine)
 
 
 # ---------------------------------------------------------------- replayer
@@ -186,7 +191,7 @@ class _TraceRunner:
     crash): shrinking removes ops arbitrarily, and only ORACLE failures may
     count as failures — never bookkeeping artifacts of the shrink itself."""
 
-    def __init__(self, trace: Dict[str, Any], store_dir: str):
+    def __init__(self, trace: Dict[str, Any], store_dir: str, engine: str = "slotted"):
         self.profile = FuzzProfile.from_dict(trace.get("profile", {}))
         self.expect = trace.get("expect", {}) or {}
         self.store = SnapshotStore(store_dir)
@@ -201,6 +206,7 @@ class _TraceRunner:
             state_machine_factory=lambda nid: KVMachine(),
             clock_skew_ms=self.profile.clock_skew_ms,
             clock_drift=self.profile.clock_drift,
+            engine=engine,
         )
         self.writes: List[Tuple[EntryId, str]] = []  # every KV write submitted
         self.submit_batches: Dict[str, int] = {}  # origin -> batch count
@@ -409,11 +415,11 @@ class _TraceRunner:
         )
 
 
-def replay(trace: Dict[str, Any]) -> FuzzReport:
+def replay(trace: Dict[str, Any], engine: str = "slotted") -> FuzzReport:
     """Replay a trace against a fresh cluster; deterministic per trace."""
     ops = trace.get("ops", [])
     with tempfile.TemporaryDirectory(prefix="fuzz-store-") as store_dir:
-        runner = _TraceRunner(trace, store_dir)
+        runner = _TraceRunner(trace, store_dir, engine=engine)
         for i, op in enumerate(ops):
             try:
                 runner.apply_op(op)
@@ -488,10 +494,12 @@ class ProtocolFuzzer:
         seed: int,
         steps: int = 40,
         profile: Optional[FuzzProfile] = None,
+        engine: str = "slotted",
     ):
         self.seed = seed
         self.steps = steps
         self.profile = profile or FuzzProfile()
+        self.engine = engine
 
     def generate(self) -> Dict[str, Any]:
         rng = random.Random(self.seed * 0x9E3779B1 + 7)
@@ -597,14 +605,15 @@ class ProtocolFuzzer:
 
     def run(self) -> Tuple[Dict[str, Any], FuzzReport]:
         trace = self.generate()
-        return trace, replay(trace)
+        return trace, replay(trace, engine=self.engine)
 
 
 # ------------------------------------------------------- hierarchy sweep
 
 
 def hierarchy_sweep(
-    seed: int, steps: int = 30, profile: Optional[FuzzProfile] = None
+    seed: int, steps: int = 30, profile: Optional[FuzzProfile] = None,
+    engine: str = "slotted",
 ) -> Tuple[Dict[str, Any], FuzzReport]:
     """Seeded adversary sweep at the HIERARCHY level: three pods under one
     simulation, driven through pod-leader crashes, intra-pod partitions,
@@ -624,6 +633,7 @@ def hierarchy_sweep(
     h = HierarchicalCluster(
         n_pods=3, hosts_per_pod=3, seed=seed, config=p.raft_config(),
         state_machine_factory=lambda nid: KVMachine(),
+        engine=engine,
     )
     h.bootstrap()
     actions: List[Dict[str, Any]] = []
@@ -775,6 +785,11 @@ def main(argv=None) -> int:
         help="run with RaftConfig.election_noop (eager per-term barrier)",
     )
     ap.add_argument(
+        "--engine", choices=("slotted", "legacy"), default="slotted",
+        help="simulator event engine (schedules are byte-identical; legacy "
+        "exists for equivalence gating and performance baselines)",
+    )
+    ap.add_argument(
         "--hierarchy", action="store_true",
         help="run the hierarchy-level sweep (3 pods, pod-leader crashes, "
         "intra-pod partitions, global-link adversaries, all read modes) "
@@ -792,10 +807,12 @@ def main(argv=None) -> int:
         try:
             if args.hierarchy:
                 trace, rep = hierarchy_sweep(
-                    seed, steps=args.steps, profile=profile
+                    seed, steps=args.steps, profile=profile, engine=args.engine
                 )
             else:
-                fz = ProtocolFuzzer(seed, steps=args.steps, profile=profile)
+                fz = ProtocolFuzzer(
+                    seed, steps=args.steps, profile=profile, engine=args.engine
+                )
                 trace, rep = fz.run()
         except Exception:  # an oracle escaped as a crash: still a failure
             failures += 1

@@ -24,12 +24,21 @@ global decision through local (cheap) consensus.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.fast_raft import FastRaftNode
 from repro.core.metrics import Recorder
 from repro.core.raft import RaftConfig, RaftNode
-from repro.core.sim import Adversary, Cluster, LinkModel, MembershipError, Simulation
+from repro.core.sim import (
+    EV_GDELIVER,
+    EV_GTICK,
+    Adversary,
+    Cluster,
+    LinkModel,
+    MembershipError,
+    Simulation,
+)
 from repro.core.statemachine import LogListMachine, StateMachine
 from repro.core.types import Entry, EntryId, Message, NodeId
 
@@ -149,9 +158,13 @@ class HierarchicalCluster:
         config: Optional[RaftConfig] = None,
         global_config: Optional[RaftConfig] = None,
         state_machine_factory: Optional[Callable[[NodeId], StateMachine]] = None,
+        engine: str = "slotted",
+        link_rng: str = "shared",
+        link_rng_backend: str = "auto",
     ):
         self.sim = Simulation(seed)
         self.protocol = protocol
+        self.engine = engine
         self.pod_ids = [f"pod{i}" for i in range(n_pods)]
         self.global_link = LinkModel(global_loss, global_latency, jitter)
         self.global_metrics = Recorder()
@@ -185,6 +198,9 @@ class HierarchicalCluster:
                 node_prefix=f"{pod}h",
                 sim=self.sim,
                 state_machine_factory=self._pod_sm_factory(pod),
+                engine=engine,
+                link_rng=link_rng,
+                link_rng_backend=link_rng_backend,
             )
 
         # Global tier: one logical member per pod. The default config
@@ -209,6 +225,9 @@ class HierarchicalCluster:
                     seed=seed * 104729 + pi,
                     state_machine=GlobalDeliveryMachine(self._make_global_apply(pod)))
             n.metrics = self.global_metrics
+            # Global-tier members are built directly (not via Cluster._make_node),
+            # so the engine flag must reach them here too.
+            n._legacy_mode = engine == "legacy"
             self.global_nodes[pod] = n
         for pod, n in self.global_nodes.items():
             n.start(self.sim.now)
@@ -240,13 +259,32 @@ class HierarchicalCluster:
         return self.pods[pod].leader() is not None
 
     def _schedule_global_tick(self, pod: str) -> None:
-        def tick():
-            n = self.global_nodes[pod]
-            if n.alive and self.pod_available(pod):
-                self._global_dispatch(pod, n.on_tick(self.sim.now))
-            self._schedule_global_tick(pod)
+        if self.engine == "legacy":
+            def tick():
+                n = self.global_nodes[pod]
+                if n.alive and self.pod_available(pod):
+                    self._global_dispatch(pod, n.on_tick(self.sim.now))
+                self._schedule_global_tick(pod)
 
-        self.sim.schedule(self.tick_interval, tick)
+            self.sim.schedule(self.tick_interval, tick)
+            return
+        self.sim.schedule_record(self.tick_interval, EV_GTICK, self, pod)
+
+    def _fire_global_tick(self, pod: str) -> None:
+        """Slotted-engine global tick (EV_GTICK). Unlike pod-level timers,
+        the global member's tick reschedules UNCONDITIONALLY — a member
+        whose pod lost its leader (unavailable) keeps its timer alive and
+        resumes participating the instant the pod re-elects, with no
+        restart hook needed. Firing is gated on liveness AND pod
+        availability, exactly like the legacy closure."""
+        n = self.global_nodes[pod]
+        if n.alive and self.pod_available(pod):
+            self._global_dispatch(pod, n.on_tick(self.sim.now))
+        sim = self.sim
+        heapq.heappush(
+            sim._events,
+            (sim.now + self.tick_interval, next(sim._seq), EV_GTICK, self, pod),
+        )
 
     def _global_dispatch(self, src: str, outputs: Sequence[Tuple[NodeId, Message]]) -> None:
         for dst, msg in outputs:
@@ -261,20 +299,34 @@ class HierarchicalCluster:
         else:
             copies = [msg]
         for m in copies:
-            self._global_transmit(dst, m)
+            self._global_transmit(src, dst, m)
 
-    def _global_transmit(self, dst: str, msg: Message) -> None:
+    def _global_transmit(self, src: str, dst: str, msg: Message) -> None:
         if self.global_link.loss > 0 and self.sim.rng.random() < self.global_link.loss:
             self.global_metrics.count("dropped")
             return
         delay = self.global_link.sample_latency(self.sim.rng)
+        if self.engine == "legacy":
+            def deliver():
+                n = self.global_nodes.get(dst)
+                if n is not None and n.alive and self.pod_available(dst):
+                    self._global_dispatch(dst, n.on_message(msg, self.sim.now))
 
-        def deliver():
-            n = self.global_nodes.get(dst)
-            if n is not None and n.alive and self.pod_available(dst):
-                self._global_dispatch(dst, n.on_message(msg, self.sim.now))
+            self.sim.schedule(delay, deliver)
+            return
+        sim = self.sim
+        heapq.heappush(
+            sim._events,
+            (sim.now + delay, next(sim._seq), EV_GDELIVER, self, src, dst, msg),
+        )
 
-        self.sim.schedule(delay, deliver)
+    def _global_deliver(self, src: str, dst: str, msg: Message) -> None:
+        """Slotted-engine global delivery (EV_GDELIVER): liveness and pod
+        availability are evaluated at DELIVERY time, same as the legacy
+        closure — a pod that loses its leader mid-flight drops the message."""
+        n = self.global_nodes.get(dst)
+        if n is not None and n.alive and self.pod_available(dst):
+            self._global_dispatch(dst, n.on_message(msg, self.sim.now))
 
     # ------------------------------------------------------ down-propagation
 
@@ -415,15 +467,34 @@ class HierarchicalCluster:
     def run_until_globally_committed(
         self, entry_ids: Sequence[EntryId], max_time: float = 30_000.0
     ) -> bool:
-        def done() -> bool:
-            return all(
-                self.global_metrics.traces.get(e) is not None
-                and self.global_metrics.traces[e].committed
-                for e in entry_ids
-            )
+        if self.engine == "legacy":
+            def done() -> bool:
+                return all(
+                    self.global_metrics.traces.get(e) is not None
+                    and self.global_metrics.traces[e].committed
+                    for e in entry_ids
+                )
 
-        self.sim.run_until(self.sim.now + max_time, stop=done)
-        return done()
+            self.sim.run_until(self.sim.now + max_time, stop=done)
+            return done()
+        # Event-driven: the global Recorder drains the pending set as each
+        # entry first commits, so the periodic stop check is O(1). No early
+        # return when pending starts empty — the scan-based engine still ran
+        # up to check_every events before its first stop check, and skipping
+        # them would fork the schedule.
+        pending = {
+            e
+            for e in entry_ids
+            if not (
+                (t := self.global_metrics.traces.get(e)) is not None and t.committed
+            )
+        }
+        self.global_metrics.watch_commits(pending)
+        try:
+            self.sim.run_until(self.sim.now + max_time, stop=lambda: not pending)
+        finally:
+            self.global_metrics.unwatch_commits(pending)
+        return not pending
 
     def run_until_delivered(self, n_cmds: int, max_time: float = 60_000.0) -> bool:
         def done() -> bool:

@@ -44,6 +44,25 @@ class Recorder:
         # Safety invariants enforced online:
         self.committed_at: Dict[int, EntryId] = {}   # commit safety
         self.leaders: Dict[int, set] = {}            # election safety
+        # Commit watchers: sets of EntryIds that still await their FIRST
+        # commit; committed() discards ids as they land, so a waiter's stop
+        # predicate is an O(1) emptiness check instead of a scan over its
+        # whole entry list every check interval (Cluster.run_until_committed
+        # registers one per call). Purely observational: watchers never
+        # schedule events or perturb the simulation schedule.
+        self.commit_watchers: List[set] = []
+
+    def watch_commits(self, pending: set) -> None:
+        """Register ``pending`` (a set of EntryIds) to be drained as those
+        entries first commit. Ids already committed must be removed by the
+        caller before registering. Call unwatch_commits() when done."""
+        self.commit_watchers.append(pending)
+
+    def unwatch_commits(self, pending: set) -> None:
+        try:
+            self.commit_watchers.remove(pending)
+        except ValueError:
+            pass
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -71,6 +90,9 @@ class Recorder:
         if t.first_commit_at < 0:
             t.first_commit_at = now
             t.committed_index = index
+            if self.commit_watchers:
+                for w in self.commit_watchers:
+                    w.discard(entry.entry_id)
         self.applied.setdefault(node_id, []).append((index, entry.entry_id))
 
     def leader_elected(self, node_id: NodeId, term: int) -> None:

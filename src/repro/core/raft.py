@@ -22,12 +22,13 @@ InstallSnapshot instead of log replay.
 """
 from __future__ import annotations
 
+import bisect
 import copy
 import dataclasses
 import json
 import random
 import zlib
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core.statemachine import DedupTable, LogListMachine, StateMachine
 from repro.core.types import (
@@ -61,6 +62,12 @@ from repro.core.types import (
 )
 
 Outputs = List[Tuple[NodeId, Message]]
+
+# Interned message dispatch: (node class, message class) -> unbound handler.
+# Replaces the per-message ``getattr(self, f"_handle_{type(msg).__name__}")``
+# string formatting + attribute scan on the hottest path in the simulator.
+# Keyed per node class so FastRaftNode overrides resolve correctly.
+_HANDLER_CACHE: Dict[Tuple[type, type], Optional[Callable]] = {}
 
 CONFIG_PREFIX = "__config__:"  # membership-change commands
 NOOP_PREFIX = "__noop__:"      # read-barrier no-op (fresh leader, no
@@ -123,9 +130,16 @@ class RaftConfig:
     #   batch_window — leader-side coalescing delay (sim-ms): client commands
     #       buffer up to this long (or max_batch_entries) before one
     #       append+broadcast. 0.0 = replicate immediately (seed behavior).
+    #   adaptive_batch_window — when True the leader IGNORES the static
+    #       batch_window and derives the coalescing delay from the observed
+    #       submit arrival rate (EWMA of inter-arrival gaps): dense traffic
+    #       waits just long enough to coalesce ~half a max batch (capped at
+    #       one heartbeat interval), sparse traffic replicates immediately.
+    #       Default False = schedule-preserving static behavior.
     max_batch_entries: int = 64
     max_inflight_batches: int = 4
     batch_window: float = 0.0
+    adaptive_batch_window: bool = False
     # Snapshot / log compaction: once the applied prefix since the last
     # snapshot reaches this many entries, fold it into a Snapshot and drop it
     # from the log. 0 = never compact (seed behavior). Followers whose
@@ -177,7 +191,7 @@ class RaftConfig:
     election_noop: bool = False
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _SnapshotTransfer:
     """Leader-side progress of one chunked snapshot transfer to one
     follower. ``offset`` is the follower-acknowledged cursor — the resume
@@ -196,7 +210,7 @@ class _SnapshotTransfer:
     rewind_mark: int = -1
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _PendingRead:
     """Leader-side linearizable read awaiting confirmation + apply.
 
@@ -214,7 +228,7 @@ class _PendingRead:
     arrived_at: float
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _ClientRead:
     """Origin-side bookkeeping for one in-flight read: enough to re-route
     the (idempotent) query after leader churn or message loss."""
@@ -224,7 +238,7 @@ class _ClientRead:
     last_sent: float = -1.0e18
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _ReplicaRead:
     """A read served LOCALLY at this node (follower, learner, or leader)
     from the leader-published certified watermark — no leader round-trip.
@@ -312,6 +326,19 @@ class RaftNode:
         self._batch_buffer: List[Tuple[Any, EntryId]] = []
         self._buffered_ids: set = set()
         self._batch_deadline = 0.0
+        # Submit arrival-rate estimate (adaptive_batch_window): EWMA of the
+        # gap between successive _leader_append_many calls, in sim-ms.
+        # -1.0 = no gap observed yet; 0.0 is a VALID estimate (same-instant
+        # bursts are the densest traffic there is). A gap far above the
+        # estimate is an idle pause, not a rate sample — it is skipped so
+        # a burst boundary cannot balloon the next burst's window.
+        self._arrival_gap_ewma = -1.0
+        self._last_arrival = -1.0
+        # Durable-prefix scan cursor: every slot at index <= _durable_hi is
+        # known non-tentative, so _durable_prefix resumes its scan here
+        # instead of re-walking the log. A slot only LEAVES the prefix on
+        # truncation or snapshot install/restore, which clamp the cursor.
+        self._durable_hi = 0
         # Persistence hooks, wired by the harness (e.g. checkpoint.
         # SnapshotStore): snapshot_sink(node_id, snapshot) after each
         # compaction; hard_state_sink(node_id, term, voted_for, seq,
@@ -411,6 +438,28 @@ class RaftNode:
         # Read coalescing: deadline of the probe that will confirm the
         # currently-buffered reads (0.0 = none scheduled).
         self._probe_deadline = 0.0
+        # When True every hot-path shortcut below (handler dispatch table,
+        # incremental quorum trackers, idle-tick early-out, sort-free round
+        # pruning, shared-Entry replication) is bypassed in favor of the
+        # pre-optimization code, so the legacy engine reproduces the old
+        # cost profile and the equivalence suite can replay both paths.
+        # Set by Cluster(engine="legacy").
+        self._legacy_mode = False
+        # Incremental quorum-ack tracker: per active voter set, an
+        # ascending sorted list of the values _quorum_acked_round would
+        # otherwise sort on every ack (self's _hb_round + peer acked
+        # rounds). Lazily rebuilt when dirty (config change, leadership
+        # reset, restart); single-value bisect updates otherwise.
+        self._ack_dirty = True
+        self._ack_sets: List[Tuple[FrozenSet[NodeId], List[int], int]] = []
+        # Incremental commit-match tracker: per active voter set, the
+        # ascending sorted match_index values of its non-self voters,
+        # giving _leader_advance_commit its quorum threshold without a
+        # per-reply set comprehension over all peers.
+        self._match_dirty = True
+        self._match_sets: List[
+            Tuple[FrozenSet[NodeId], List[int], int, bool]
+        ] = []
 
     # ---------------------------------------------------------------- util
 
@@ -629,6 +678,7 @@ class RaftNode:
         self._confirmed_sent_sim = -1.0e18
         self._lease_expiry_local = -1.0e18
         self._probe_deadline = 0.0
+        self._ack_dirty = True
 
     def _become_candidate(self, now: float) -> Outputs:
         self.term += 1
@@ -664,6 +714,7 @@ class RaftNode:
         self._lead_since = now
         self.next_index = {p: self.last_log_index() + 1 for p in self.peers()}
         self.match_index = {p: 0 for p in self.peers()}
+        self._match_dirty = True
         self._inflight = {}
         self._pipe_next = {}
         self._snap_xfer = {}
@@ -849,6 +900,21 @@ class RaftNode:
     def on_tick(self, now: float) -> Outputs:
         if not self.alive:
             return []
+        if (
+            not self._legacy_mode
+            and self.role is not Role.LEADER
+            and now < self.election_deadline
+            and not self._reads_inflight
+            and not self._replica_reads
+            and not self._outbox
+            and self._protocol_idle()
+        ):
+            # Idle non-leader fast path: with the election timer unexpired
+            # and no reads, outbox traffic, or protocol work pending, the
+            # full body below provably produces no output and mutates no
+            # state — skip it. This is where most simulated ticks land on
+            # large clusters (one leader, N-1 mostly-idle followers).
+            return []
         out: Outputs = []
         if self.role is Role.LEADER:
             # CheckQuorum: a leader that cannot confirm a commit quorum
@@ -933,6 +999,15 @@ class RaftNode:
     def _tick_protocol(self, now: float) -> Outputs:
         return []
 
+    def _protocol_idle(self) -> bool:
+        """True iff _tick_protocol would provably be a state-free no-op.
+
+        FastRaft hook: overridden to check fast-slot tallies, held
+        finalizations, and inflight proposals. Used by on_tick's idle
+        non-leader early-out; must stay conservative (False when unsure).
+        """
+        return True
+
     # ------------------------------------------------------------ messages
 
     def on_message(self, msg: Message, now: float) -> Outputs:
@@ -951,10 +1026,21 @@ class RaftNode:
             msg, (RequestVoteArgs, PreVoteArgs)
         ):
             self._become_follower(msg.term, now)
-        handler = getattr(self, f"_handle_{type(msg).__name__}", None)
+        if self._legacy_mode:
+            handler = getattr(self, f"_handle_{type(msg).__name__}", None)
+            if handler is None:
+                return self._drain_outbox([])
+            return self._drain_outbox(handler(msg, now))
+        key = (type(self), type(msg))
+        handler = _HANDLER_CACHE.get(key)
         if handler is None:
-            return self._drain_outbox([])
-        return self._drain_outbox(handler(msg, now))
+            if key in _HANDLER_CACHE:  # cached "no handler"
+                return self._drain_outbox([])
+            handler = getattr(type(self), f"_handle_{type(msg).__name__}", None)
+            _HANDLER_CACHE[key] = handler
+            if handler is None:
+                return self._drain_outbox([])
+        return self._drain_outbox(handler(self, msg, now))
 
     # -- RequestVote
 
@@ -1008,13 +1094,21 @@ class RaftNode:
         lease / confirms pending ReadIndex reads (see _note_round_ack).
         """
         self._hb_round += 1
+        if not self._legacy_mode:
+            self._ack_note_value(self.id, self._hb_round - 1, self._hb_round)
         self._round_sent[self._hb_round] = self._record_round(now)
         if len(self._round_sent) > 1024:
             # A leader cut off from its quorum keeps broadcasting; dropping
             # the oldest unconfirmed rounds only delays a (doomed) lease
             # renewal, never extends one.
-            for r in sorted(self._round_sent)[: len(self._round_sent) - 1024]:
-                del self._round_sent[r]
+            if self._legacy_mode:
+                for r in sorted(self._round_sent)[: len(self._round_sent) - 1024]:
+                    del self._round_sent[r]
+            else:
+                # Keys enter _round_sent in ascending round order, so dict
+                # insertion order IS sorted order: pop oldest-first.
+                while len(self._round_sent) > 1024:
+                    del self._round_sent[next(iter(self._round_sent))]
         out: Outputs = []
         for p in self.peers():
             self._inflight[p] = 0
@@ -1058,7 +1152,20 @@ class RaftNode:
         start = max(ni, self._pipe_next.get(peer, ni))
         while start <= self.last_log_index() and self._inflight.get(peer, 0) < depth:
             lo = start - self.snapshot_last_index - 1  # list position
-            entries = tuple(s.clone() for s in self.log[lo : lo + batch])
+            if self._legacy_mode:
+                entries = tuple(s.clone() for s in self.log[lo : lo + batch])
+            else:
+                # Entry objects are immutable after construction, so the
+                # message shares them. Slot.state only ever flips AWAY from
+                # TENTATIVE, so a non-tentative slot is state-immutable too
+                # and the message can share the whole Slot; only a tentative
+                # slot (which can flip between send and delivery) gets a
+                # fresh wrapper. Receivers wrap their own Slot on append.
+                entries = tuple(
+                    s if s.state is not SlotState.TENTATIVE
+                    else Slot(s.entry, s.state)
+                    for s in self.log[lo : lo + batch]
+                )
             out.append(
                 (
                     peer,
@@ -1213,7 +1320,12 @@ class RaftNode:
                 # Conflict: truncate from idx (Raft rule), after notifying.
                 self._on_slot_overwritten(idx, cur, incoming)
                 self._truncate_from(idx)
-            self._append_slot(incoming.clone())
+            if self._legacy_mode:
+                self._append_slot(incoming.clone())
+            else:
+                # Entry is immutable — share it; only the Slot wrapper
+                # (whose .state this replica may later flip) must be ours.
+                self._append_slot(Slot(incoming.entry, incoming.state))
             log_mutated = True
         if log_mutated:
             # The success reply below acks these entries into the leader's
@@ -1239,7 +1351,11 @@ class RaftNode:
         ack_out = self._note_round_ack(msg.src, msg.hb_id, now)
         if msg.success:
             self._inflight[msg.src] = max(0, self._inflight.get(msg.src, 0) - 1)
-            self.match_index[msg.src] = max(self.match_index.get(msg.src, 0), msg.match_index)
+            old_match = self.match_index.get(msg.src, 0)
+            if msg.match_index > old_match:
+                self.match_index[msg.src] = msg.match_index
+                if not self._legacy_mode:
+                    self._match_note_value(msg.src, old_match, msg.match_index)
             self.next_index[msg.src] = self.match_index[msg.src] + 1
             self._pipe_next[msg.src] = max(
                 self._pipe_next.get(msg.src, 0), self.next_index[msg.src]
@@ -1534,6 +1650,8 @@ class RaftNode:
         covered by the next heartbeat round (sent after the read arrived,
         so its quorum confirms the read too)."""
         self._hb_round += 1
+        if not self._legacy_mode:
+            self._ack_note_value(self.id, self._hb_round - 1, self._hb_round)
         self._round_sent[self._hb_round] = self._record_round(now)
         probe = ReadIndexProbe(term=self.term, src=self.id, leader_id=self.id,
                                probe_id=self._hb_round,
@@ -1579,19 +1697,54 @@ class RaftNode:
         acked (self implicitly acks its own latest round). Joint configs
         take the min across C_old and C_new — leadership is only confirmed
         when both halves confirm it, exactly like elections and commits."""
-        q: Optional[int] = None
+        if self._legacy_mode:
+            q: Optional[int] = None
+            for vs in self.cluster_config.voter_sets():
+                rounds = sorted(
+                    (
+                        self._hb_round
+                        if p == self.id
+                        else self._peer_acked_round.get(p, 0)
+                        for p in vs
+                    ),
+                    reverse=True,
+                )
+                need = majority(len(vs))
+                r = rounds[need - 1] if len(rounds) >= need else 0
+                q = r if q is None else min(q, r)
+            return q or 0
+        if self._ack_dirty:
+            self._ack_rebuild()
+        qr: Optional[int] = None
+        for _members, vals, need in self._ack_sets:
+            n = len(vals)
+            r = vals[n - need] if n >= need else 0
+            qr = r if qr is None else min(qr, r)
+        return qr or 0
+
+    def _ack_rebuild(self) -> None:
+        """Rebuild the incremental quorum-ack tracker from scratch. Called
+        lazily on the first quorum query after an invalidation (config
+        change, leadership reset, restart)."""
+        self._ack_sets = []
         for vs in self.cluster_config.voter_sets():
-            rounds = sorted(
-                (
-                    self._hb_round if p == self.id else self._peer_acked_round.get(p, 0)
-                    for p in vs
-                ),
-                reverse=True,
+            vals = sorted(
+                self._hb_round if p == self.id else self._peer_acked_round.get(p, 0)
+                for p in vs
             )
-            need = majority(len(vs))
-            r = rounds[need - 1] if len(rounds) >= need else 0
-            q = r if q is None else min(q, r)
-        return q or 0
+            self._ack_sets.append((frozenset(vs), vals, majority(len(vs))))
+        self._ack_dirty = False
+
+    def _ack_note_value(self, nid: NodeId, old: int, new: int) -> None:
+        """Single-value update of the quorum-ack tracker: nid's tracked
+        round moved old -> new. No-op while dirty (the rebuild will read
+        current state)."""
+        if self._ack_dirty:
+            return
+        for members, vals, _need in self._ack_sets:
+            if nid in members:
+                del vals[bisect.bisect_left(vals, old)]
+                bisect.insort(vals, new)
 
     def _note_round_ack(self, peer: NodeId, round_id: int, now: float) -> Outputs:
         """A peer echoed round ``round_id`` in the current term. When the
@@ -1600,8 +1753,17 @@ class RaftNode:
         and pending reads that arrived at or before it become servable."""
         if self.role is not Role.LEADER or round_id <= 0:
             return []
-        if round_id > self._peer_acked_round.get(peer, 0):
+        old_acked = self._peer_acked_round.get(peer, 0)
+        if round_id > old_acked:
             self._peer_acked_round[peer] = round_id
+            if not self._legacy_mode:
+                self._ack_note_value(peer, old_acked, round_id)
+        if not self._legacy_mode and round_id <= self._quorum_round:
+            # Monotonicity early-out: raising one tracked value to at most
+            # the already-confirmed round cannot lift any voter set's
+            # need-th-largest past it, so the full computation below would
+            # land in the "no progress" branch anyway.
+            return []
         q = self._quorum_acked_round()
         if q <= self._quorum_round or q not in self._round_sent:
             return []  # no progress, or a stale echo from pruned history
@@ -1622,8 +1784,17 @@ class RaftNode:
             self._wm_index = commit_pub
             self._wm_time = sent_sim
             self._count("wm_certified")
-        for r in [r for r in self._round_sent if r < q]:
-            del self._round_sent[r]
+        if self._legacy_mode:
+            for r in [r for r in self._round_sent if r < q]:
+                del self._round_sent[r]
+        else:
+            # Ascending-key insertion order: pop oldest until we reach q
+            # (q is present — checked above — so this terminates).
+            while self._round_sent:
+                r = next(iter(self._round_sent))
+                if r >= q:
+                    break
+                del self._round_sent[r]
         return self._serve_ready_reads(now) + self._serve_replica_reads(now)
 
     def _serve_ready_reads(
@@ -1794,16 +1965,67 @@ class RaftNode:
         ]
         if not pairs:
             return []
-        if self.config.batch_window > 0:
+        if self.config.adaptive_batch_window:
+            if self._last_arrival >= 0:
+                gap = now - self._last_arrival
+                idle_cut = max(8.0 * max(self._arrival_gap_ewma, 0.25), 5.0)
+                if gap >= idle_cut:
+                    # Idle pause, not a rate sample: keep the estimate — a
+                    # burst's density, not its spacing from the previous
+                    # one, is what the window must match.
+                    pass
+                elif self._arrival_gap_ewma >= 0:
+                    self._arrival_gap_ewma += 0.2 * (gap - self._arrival_gap_ewma)
+                else:
+                    self._arrival_gap_ewma = gap
+            self._last_arrival = now
+        window = self._effective_batch_window()
+        if window > 0:
             if not self._batch_buffer:
-                self._batch_deadline = now + self.config.batch_window
+                self._batch_deadline = now + window
+            elif self.config.adaptive_batch_window:
+                # A tighter estimate mid-buffer pulls the flush in; the
+                # deadline only ever shrinks, so a stale early estimate
+                # cannot strand the batch.
+                self._batch_deadline = min(self._batch_deadline, now + window)
             for c, e in pairs:
                 self._batch_buffer.append((c, e))
                 self._buffered_ids.add(e)
             if len(self._batch_buffer) >= self.config.max_batch_entries:
                 return self._flush_batch(now)
             return []
+        if self._batch_buffer:
+            # The adaptive policy flipped to streaming mid-buffer (arrivals
+            # turned too sparse for a window): release everything together
+            # rather than stranding the buffered prefix until a tick.
+            for c, e in pairs:
+                self._batch_buffer.append((c, e))
+                self._buffered_ids.add(e)
+            return self._flush_batch(now)
         return self._append_and_replicate(pairs, now)
+
+    def _effective_batch_window(self) -> float:
+        """Coalescing delay for the next batch. Static mode returns
+        config.batch_window untouched (schedule-preserving). Adaptive mode
+        sizes the window from the observed submit inter-arrival gap: wait
+        just long enough to coalesce ~half a max batch, never longer than a
+        heartbeat interval, and not at all when traffic is sparse (a gap of
+        a heartbeat or more means waiting buys nothing but latency)."""
+        if not self.config.adaptive_batch_window:
+            return self.config.batch_window
+        gap = self._arrival_gap_ewma
+        cap = self.config.heartbeat_interval / 4.0
+        # Stream (no window) while there is no rate estimate, or when
+        # arrivals are too sparse for the capped window to coalesce even
+        # ~2 commands — waiting would add latency and save nothing.
+        if gap < 0.0 or gap > cap / 2.0:
+            return 0.0
+        # Window = expected time for a FULL batch to arrive at the observed
+        # rate (the size cap flushes earlier whenever the batch actually
+        # fills), clamped to a quarter heartbeat so the worst-case latency
+        # cost stays small. The floor keeps same-instant bursts (gap ~ 0)
+        # coalescing instead of broadcasting per command.
+        return min(max(gap, 0.25) * self.config.max_batch_entries, cap)
 
     def _flush_batch(self, now: float) -> Outputs:
         pairs, self._batch_buffer = self._batch_buffer, []
@@ -1846,36 +2068,110 @@ class RaftNode:
         for p in range(start - 1, len(self.log)):
             self._entry_index.pop(self.log[p].entry.entry_id, None)
         del self.log[start - 1 :]
+        if self._durable_hi >= index:
+            self._durable_hi = index - 1
         # Roll the config back if its entry was truncated away.
         while len(self._config_log) > 1 and self._config_log[-1][0] >= index:
             self._config_log.pop()
         self._set_cluster_config(self._config_log[-1][1])
 
     def _durable_prefix(self) -> int:
-        """Largest index i such that slots 1..i are all non-tentative."""
-        i = self.snapshot_last_index  # compacted prefix is committed
-        for s in self.log:
-            if s.state is SlotState.TENTATIVE:
-                break
-            i += 1
-        return i
+        """Largest index i such that slots 1..i are all non-tentative.
+
+        Amortized O(1): the scan resumes from ``_durable_hi`` (state flips
+        only go tentative -> classic/finalized, so the prefix shrinks only
+        at the truncate/install/restore sites that clamp the cursor). The
+        full per-call walk was a top-two hot spot on long uncompacted logs
+        — it runs once per commit advance on every replica."""
+        if self._legacy_mode:
+            i = self.snapshot_last_index  # compacted prefix is committed
+            for s in self.log:
+                if s.state is SlotState.TENTATIVE:
+                    break
+                i += 1
+            return i
+        base = self.snapshot_last_index
+        i = self._durable_hi
+        if i < base:
+            i = base
+        log = self.log
+        n = len(log)
+        p = i - base
+        while p < n and log[p].state is not SlotState.TENTATIVE:
+            p += 1
+        self._durable_hi = base + p
+        return base + p
 
     def _leader_advance_commit(self, now: float) -> Outputs:
         # Largest N replicated on a quorum of EVERY active voter set with
         # term == current term. The leader counts itself only where it is a
         # voter (a leader being removed during joint consensus commits via
         # the other voters' matches — the dissertation's rule).
-        for n in range(self.last_log_index(), self.commit_index, -1):
+        if self._legacy_mode:
+            for n in range(self.last_log_index(), self.commit_index, -1):
+                s = self.slot(n)
+                if s.state is SlotState.TENTATIVE or self.term_at(n) != self.term:
+                    continue
+                acked = {self.id} | {
+                    p for p in self.peers() if self.match_index.get(p, 0) >= n
+                }
+                if self.cluster_config.commit_ok(acked):
+                    self._advance_commit(n, now)
+                    break
+            return []
+        # commit_ok({self} | {p: match_p >= n}) is monotone in n and holds
+        # exactly for n <= _commit_quorum_index(); the answer is therefore
+        # the highest non-tentative current-term index at or below it.
+        top = self._commit_quorum_index()
+        if top > self.last_log_index():
+            top = self.last_log_index()
+        for n in range(top, self.commit_index, -1):
             s = self.slot(n)
             if s.state is SlotState.TENTATIVE or self.term_at(n) != self.term:
                 continue
-            acked = {self.id} | {
-                p for p in self.peers() if self.match_index.get(p, 0) >= n
-            }
-            if self.cluster_config.commit_ok(acked):
-                self._advance_commit(n, now)
-                break
+            self._advance_commit(n, now)
+            break
         return []
+
+    def _commit_match_rebuild(self) -> None:
+        """Rebuild the incremental commit-match tracker (sorted non-self
+        voter match_index values per active voter set)."""
+        self._match_sets = []
+        for vs in self.cluster_config.voter_sets():
+            others = frozenset(p for p in vs if p != self.id)
+            vals = sorted(self.match_index.get(p, 0) for p in others)
+            self._match_sets.append(
+                (others, vals, majority(len(vs)), self.id in vs)
+            )
+        self._match_dirty = False
+
+    def _match_note_value(self, nid: NodeId, old: int, new: int) -> None:
+        """Single-value update of the commit-match tracker: nid's
+        match_index moved old -> new (either direction — snapshot delivery
+        can rewind it)."""
+        if self._match_dirty:
+            return
+        for members, vals, _need, _self_in in self._match_sets:
+            if nid in members:
+                del vals[bisect.bisect_left(vals, old)]
+                bisect.insort(vals, new)
+
+    def _commit_quorum_index(self) -> int:
+        """Largest n for which every active voter set has a commit quorum
+        at match >= n, the leader's own log counted where it votes."""
+        if self._match_dirty:
+            self._commit_match_rebuild()
+        top: Optional[int] = None
+        for _members, vals, need, self_in in self._match_sets:
+            k = need - 1 if self_in else need
+            if k <= 0:
+                r = self.last_log_index()  # leader alone is a quorum here
+            elif len(vals) >= k:
+                r = vals[len(vals) - k]
+            else:
+                r = 0
+            top = r if top is None else min(top, r)
+        return 0 if top is None else top
 
     def _advance_commit(self, new_commit: int, now: float) -> None:
         new_commit = min(new_commit, self._durable_prefix())
@@ -1941,6 +2237,7 @@ class RaftNode:
         self.snapshot = snap.clone()
         self.log = []
         self._entry_index = {}
+        self._durable_hi = snap.last_index
         self.state_machine.restore(copy.deepcopy(snap.state))
         self._dedup = DedupTable.from_state(snap.dedup)
         self.commit_index = snap.last_index
@@ -2001,6 +2298,13 @@ class RaftNode:
         self.commit_index = max(self.commit_index, snap.last_index)
         self.snapshot = snap.clone()
         self.log = suffix
+        # Compacted prefix is durable; a retained suffix keeps its absolute
+        # indices so a larger cursor stays valid, but never past the end
+        # (the suffix is dropped entirely on a term mismatch).
+        self._durable_hi = min(
+            max(self._durable_hi, snap.last_index),
+            snap.last_index + len(suffix),
+        )
         self._entry_index = {
             s.entry.entry_id: snap.last_index + p + 1
             for p, s in enumerate(self.log)
@@ -2062,7 +2366,10 @@ class RaftNode:
         match_index=commit_index — so at most one redundant message is
         sent, which is the right trade against a permanent livelock."""
         self._snap_xfer.pop(peer, None)
+        old_match = self.match_index.get(peer, 0)
         self.match_index[peer] = match_index
+        if not self._legacy_mode and match_index != old_match:
+            self._match_note_value(peer, old_match, match_index)
         self.next_index[peer] = self.match_index[peer] + 1
         self._pipe_next[peer] = self.next_index[peer]
         out = self._leader_advance_commit(now)
@@ -2258,6 +2565,8 @@ class RaftNode:
         if cfg == self.cluster_config:
             return
         self.cluster_config = cfg
+        self._ack_dirty = True
+        self._match_dirty = True
         if self.role is Role.LEADER:
             for p in self.peers():
                 self.next_index.setdefault(p, self.last_log_index() + 1)
@@ -2472,6 +2781,8 @@ class RaftNode:
         self._outbox = []
         self._pending_stepdown = False
         self._probe_deadline = 0.0
+        self._ack_dirty = True
+        self._match_dirty = True
         if self.snapshot is not None:
             self.state_machine.restore(copy.deepcopy(self.snapshot.state))
             self._dedup = DedupTable.from_state(self.snapshot.dedup)

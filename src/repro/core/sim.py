@@ -190,29 +190,78 @@ def _entry_bytes_cmd(command) -> int:
     return _ENTRY_BASE_BYTES + len(str(command))
 
 
+# Slotted event kinds. Events are plain tuples on one global heap:
+#   (time, seq, kind, *payload)
+# ordered by (time, seq) exactly as the closure-era heap was — seq is unique,
+# so comparison never reaches the heterogeneous payload. Typed records
+# replace the per-event closure allocation that used to dominate the hot
+# path: a message hop is (t, seq, EV_DELIVER, cluster, src, dst, msg) and a
+# node tick is (t, seq, EV_TICK, cluster, nid), both dispatched by run_until
+# without creating (or calling through) a Python closure. EV_CLOSURE keeps
+# Simulation.schedule() working for arbitrary callbacks (membership polls,
+# read failover loops, tests); kinds are ordered by observed frequency.
+# To add a new event type: allocate a constant here, push the tuple with
+# its payload, and add a dispatch arm in Simulation.run_until (see
+# DESIGN.md section 11).
+EV_CLOSURE = 0   # (fn,)                 -> fn()
+EV_DELIVER = 1   # (cluster, src, dst, msg) -> cluster._deliver(...)
+EV_TICK = 2      # (cluster, nid)        -> cluster._fire_tick(nid)
+EV_GDELIVER = 3  # (hier, src, dst, msg) -> hier._global_deliver(...)
+EV_GTICK = 4     # (hier, pod)           -> hier._fire_global_tick(pod)
+
+
 class Simulation:
-    """Seeded event loop: (time, seq) ordering makes runs fully deterministic."""
+    """Seeded event loop: (time, seq) ordering makes runs fully deterministic.
+
+    ``events`` counts retired events across the run — the numerator of the
+    simulated-events/sec throughput number benchmarks/sim_speed.py tracks.
+    """
 
     def __init__(self, seed: int = 0):
         self.now = 0.0
         self.rng = random.Random(seed)
-        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self._events: List[Tuple] = []
         self._seq = itertools.count()
+        self.events = 0
 
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._events, (self.now + delay, next(self._seq), fn))
+        heapq.heappush(
+            self._events, (self.now + delay, next(self._seq), EV_CLOSURE, fn)
+        )
+
+    def schedule_record(self, delay: float, kind: int, *payload) -> None:
+        """Schedule a typed (closure-free) event record."""
+        heapq.heappush(
+            self._events, (self.now + delay, next(self._seq), kind) + payload
+        )
 
     def run_until(
         self, t_max: float, stop: Optional[Callable[[], bool]] = None, check_every: int = 32
     ) -> None:
         n = 0
-        while self._events and self._events[0][0] <= t_max:
-            t, _, fn = heapq.heappop(self._events)
-            self.now = max(self.now, t)
-            fn()
+        events = self._events
+        pop = heapq.heappop
+        while events and events[0][0] <= t_max:
+            ev = pop(events)
+            t = ev[0]
+            if t > self.now:
+                self.now = t
+            kind = ev[2]
+            if kind == EV_DELIVER:
+                ev[3]._deliver(ev[4], ev[5], ev[6])
+            elif kind == EV_TICK:
+                ev[3]._fire_tick(ev[4])
+            elif kind == EV_CLOSURE:
+                ev[3]()
+            elif kind == EV_GDELIVER:
+                ev[3]._global_deliver(ev[4], ev[5], ev[6])
+            else:  # EV_GTICK
+                ev[3]._fire_global_tick(ev[4])
             n += 1
             if stop is not None and n % check_every == 0 and stop():
+                self.events += n
                 return
+        self.events += n
         self.now = max(self.now, t_max) if not self._events else self.now
 
 
@@ -266,10 +315,90 @@ class LinkModel:
         return cost
 
 
+class VectorLinkRNG:
+    """Batched per-(src, dst) uniform streams for the vectorized link model
+    (``Cluster(link_rng="vectorized")``).
+
+    Determinism contract: the i-th uniform consumed on directed link
+    (src, dst) depends ONLY on (seed, src, dst, i) — never on traffic on
+    other links, on cluster size, or on wall-clock interleaving. Draws are
+    generated a block at a time (one backend call per ``block`` draws per
+    link) instead of one scalar ``random.Random`` call per message; block i
+    of a pair's stream is seeded from (seed, crc32(src->dst), i), so streams
+    are reproducible and extendable without re-generating prefixes. The
+    block size is part of the stream definition and therefore fixed.
+
+    Backends: "numpy" (default when importable), "jax" (same contract via
+    fold_in-keyed uniforms, useful when the surrounding experiment already
+    lives on an accelerator), "python" (pure-Python fallback, no deps).
+    Note this mode is deterministic per seed but intentionally NOT
+    draw-for-draw identical to the default shared-``sim.rng`` stream: the
+    shared stream interleaves all links into one sequence, which is exactly
+    the coupling the per-link contract removes. Schedule-equivalence
+    guarantees apply to the default mode; vectorized runs are a separate,
+    self-consistent family of schedules."""
+
+    def __init__(self, seed: int = 0, block: int = 512, backend: str = "auto"):
+        self.seed = seed
+        self.block = block
+        if backend == "auto":
+            try:
+                import numpy  # noqa: F401
+                backend = "numpy"
+            except ImportError:  # pragma: no cover - numpy is normally present
+                backend = "python"
+        self.backend = backend
+        # (src, dst) -> [buffer, cursor, next_block_index]
+        self._streams: Dict[Tuple[NodeId, NodeId], list] = {}
+
+    def _gen_block(self, src: NodeId, dst: NodeId, block_index: int):
+        pair_key = zlib.crc32(f"{src}->{dst}".encode())
+        if self.backend == "numpy":
+            import numpy as np
+
+            gen = np.random.default_rng([self.seed, pair_key, block_index])
+            return gen.random(self.block).tolist()
+        if self.backend == "jax":
+            import jax
+
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.seed), pair_key),
+                block_index,
+            )
+            return [float(u) for u in jax.random.uniform(key, (self.block,))]
+        r = random.Random((self.seed, pair_key, block_index))
+        return [r.random() for _ in range(self.block)]
+
+    def next(self, src: NodeId, dst: NodeId) -> float:
+        st = self._streams.get((src, dst))
+        if st is None:
+            st = [self._gen_block(src, dst, 0), 0, 1]
+            self._streams[(src, dst)] = st
+        elif st[1] >= self.block:
+            st[0] = self._gen_block(src, dst, st[2])
+            st[1] = 0
+            st[2] += 1
+        u = st[0][st[1]]
+        st[1] += 1
+        return u
+
+
 class Cluster:
     """N consensus nodes over a lossy simulated network.
 
     protocol: "raft" | "fastraft"
+    engine:   "slotted" (default) — typed event records, closure-free hot
+              path, incremental quorum bookkeeping in the nodes. "legacy" —
+              the pre-optimization closure engine and node-level slow
+              paths, kept as the benchmark/equivalence baseline. Both
+              produce BYTE-IDENTICAL schedules for identical seeds (gated
+              by tests/test_sim_equivalence.py); legacy only reproduces the
+              old CPU cost profile.
+    link_rng: "shared" (default) — per-message scalar draws from the one
+              sim.rng stream, exactly the seed-era network. "vectorized" —
+              batched per-(src, dst) uniform streams (VectorLinkRNG):
+              deterministic per seed, draws decoupled across links, one
+              backend call per block instead of one RNG call per message.
     """
 
     def __init__(
@@ -291,7 +420,20 @@ class Cluster:
         state_machine_factory: Optional[Callable[[NodeId], StateMachine]] = None,
         clock_skew_ms: float = 0.0,
         clock_drift: float = 0.0,
+        engine: str = "slotted",
+        link_rng: str = "shared",
+        link_rng_backend: str = "auto",
     ):
+        if engine not in ("slotted", "legacy"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if link_rng not in ("shared", "vectorized"):
+            raise ValueError(f"unknown link_rng {link_rng!r}")
+        self.engine = engine
+        self._vec_rng = (
+            VectorLinkRNG(seed, backend=link_rng_backend)
+            if link_rng == "vectorized"
+            else None
+        )
         self.sim = sim or Simulation(seed)
         self.link = LinkModel(loss, base_latency, jitter, msg_overhead,
                               bytes_per_ms, mtu_bytes)
@@ -323,6 +465,10 @@ class Cluster:
         # completed through the nodes' read_done_fn.
         self.reads: Dict[EntryId, Dict] = {}
         self._read_counter = 0
+        # Read watchers (same shape as Recorder.commit_watchers): sets of
+        # read ids drained as their reads complete, so run_until_reads'
+        # stop predicate is an O(1) emptiness check.
+        self._read_watchers: List[set] = []
         # Optional message-level fault injector (fuzzer hook); None =
         # transparent transport, exactly the seed behavior.
         self.adversary: Optional[Adversary] = None
@@ -354,6 +500,7 @@ class Cluster:
         )
         node = cls(nid, list(members), config=RaftConfig(**vars(self.config)),
                    seed=seed, state_machine=sm, cluster_config=cluster_config)
+        node._legacy_mode = self.engine == "legacy"
         node.metrics = self.metrics
         node.read_done_fn = self._read_completed
         if self.clock_skew_ms > 0 or self.clock_drift > 0:
@@ -370,14 +517,33 @@ class Cluster:
     # ------------------------------------------------------------ plumbing
 
     def _schedule_tick(self, nid: NodeId) -> None:
-        def tick():
-            node = self.nodes.get(nid)
-            if node is not None:
-                if node.alive:
-                    self.dispatch(nid, node.on_tick(self.sim.now))
-                self._schedule_tick(nid)
+        if self.engine == "legacy":
+            def tick():
+                node = self.nodes.get(nid)
+                if node is not None:
+                    if node.alive:
+                        self.dispatch(nid, node.on_tick(self.sim.now))
+                    self._schedule_tick(nid)
 
-        self.sim.schedule(self.tick_interval, tick)
+            self.sim.schedule(self.tick_interval, tick)
+            return
+        self.sim.schedule_record(self.tick_interval, EV_TICK, self, nid)
+
+    def _fire_tick(self, nid: NodeId) -> None:
+        """Slotted-engine tick event: semantically identical to the legacy
+        tick closure — looking the node up by id at FIRE time is the timer
+        cancellation (crashed-and-popped or replaced nodes simply miss),
+        and a dead-but-present node keeps its timer ticking so restart
+        needs no rescheduling."""
+        node = self.nodes.get(nid)
+        if node is not None:
+            if node.alive:
+                self.dispatch(nid, node.on_tick(self.sim.now))
+            sim = self.sim
+            heapq.heappush(
+                sim._events,
+                (sim.now + self.tick_interval, next(sim._seq), EV_TICK, self, nid),
+            )
 
     def _link_for(self, src: NodeId, dst: NodeId) -> LinkModel:
         return self.link_overrides.get((src, dst), self.link)
@@ -402,10 +568,22 @@ class Cluster:
         link = self._link_for(src, dst)
         size_aware = link.bytes_per_ms > 0 or link.mtu_bytes > 0
         size = wire_size(msg) if size_aware else 0
-        if link.loss > 0 and self.sim.rng.random() < link.drop_probability(size):
-            self.metrics.count("dropped")
-            return
-        delay = link.sample_latency(self.sim.rng)
+        vr = self._vec_rng
+        if vr is None:
+            if link.loss > 0 and self.sim.rng.random() < link.drop_probability(size):
+                self.metrics.count("dropped")
+                return
+            delay = link.sample_latency(self.sim.rng)
+        else:
+            # Vectorized mode: same gating as the scalar path (a lossless
+            # link consumes no loss draw, a jitter-free link no jitter
+            # draw), uniforms pulled from the (src, dst) block stream.
+            if link.loss > 0 and vr.next(src, dst) < link.drop_probability(size):
+                self.metrics.count("dropped")
+                return
+            delay = link.base_latency + (
+                link.jitter * vr.next(src, dst) if link.jitter else 0.0
+            )
         overhead = link.serialization_cost(size)
         if overhead > 0:
             # Per-RPC serialization (+ size-proportional transmission when
@@ -418,12 +596,28 @@ class Cluster:
             self._link_busy[(src, dst)] = start + overhead
             delay += (start + overhead) - self.sim.now
 
-        def deliver():
-            node = self.nodes.get(dst)
-            if node is not None and node.alive and (src, dst) not in self.blocked:
-                self.dispatch(dst, node.on_message(msg, self.sim.now))
+        if self.engine == "legacy":
+            def deliver():
+                node = self.nodes.get(dst)
+                if node is not None and node.alive and (src, dst) not in self.blocked:
+                    self.dispatch(dst, node.on_message(msg, self.sim.now))
 
-        self.sim.schedule(delay, deliver)
+            self.sim.schedule(delay, deliver)
+            return
+        sim = self.sim
+        heapq.heappush(
+            sim._events,
+            (sim.now + delay, next(sim._seq), EV_DELIVER, self, src, dst, msg),
+        )
+
+    def _deliver(self, src: NodeId, dst: NodeId, msg: Message) -> None:
+        """Slotted-engine delivery event (the legacy deliver closure's
+        body): liveness and partition state are evaluated at DELIVERY time,
+        so messages in flight when a node crashes or a partition forms are
+        lost exactly as before."""
+        node = self.nodes.get(dst)
+        if node is not None and node.alive and (src, dst) not in self.blocked:
+            self.dispatch(dst, node.on_message(msg, self.sim.now))
 
     # ------------------------------------------------------------ workload
 
@@ -528,6 +722,7 @@ class Cluster:
                 rec["ok"] = False
                 rec["error"] = "read failover exhausted: no host completed it"
                 rec["completed_at"] = self.sim.now
+                self._notify_read_watchers(rid)
                 return
             # Next host after the last attempt, round-robin over the
             # current membership (live hosts only).
@@ -566,31 +761,75 @@ class Cluster:
         for k in ("wm_index", "wm_time"):
             if k in result:
                 rec[k] = result[k]
+        self._notify_read_watchers(read_id)
+
+    def _notify_read_watchers(self, read_id) -> None:
+        if self._read_watchers:
+            for w in self._read_watchers:
+                w.discard(read_id)
 
     def read_value(self, read_id: EntryId):
         return self.reads[read_id]["value"]
 
     def run_until_reads(self, read_ids, max_time: float = 30_000.0) -> bool:
-        def done() -> bool:
-            return all(
-                self.reads[r]["completed_at"] is not None for r in read_ids
-            )
+        """Run until every listed read completed (or max_time). The stop
+        condition is event-driven: completion hooks drain a pending set, so
+        each periodic stop check is O(1) regardless of how many reads are
+        being awaited. Event population (and thus the schedule) is
+        identical to the scan-based formulation."""
+        if self.engine == "legacy":
+            def done() -> bool:
+                return all(
+                    self.reads[r]["completed_at"] is not None for r in read_ids
+                )
 
-        self.sim.run_until(self.sim.now + max_time, stop=done)
-        return done()
+            self.sim.run_until(self.sim.now + max_time, stop=done)
+            return done()
+        # No early return when pending is already empty: the scan-based
+        # engine still ran up to check_every events before its first stop
+        # check, and skipping them here would fork the schedule.
+        pending = {r for r in read_ids if self.reads[r]["completed_at"] is None}
+        self._read_watchers.append(pending)
+        try:
+            self.sim.run_until(self.sim.now + max_time, stop=lambda: not pending)
+        finally:
+            self._read_watchers.remove(pending)
+        return not pending
 
     def run(self, duration: float, stop: Optional[Callable[[], bool]] = None) -> None:
         self.sim.run_until(self.sim.now + duration, stop)
 
     def run_until_committed(self, entry_ids: Sequence[EntryId], max_time: float = 10_000.0) -> bool:
-        def done() -> bool:
-            return all(
-                self.metrics.traces.get(e) is not None and self.metrics.traces[e].committed
-                for e in entry_ids
-            )
+        """Run until every listed entry committed (or max_time). Event-
+        driven: Recorder.committed() drains a registered pending set as
+        entries first commit, so the periodic stop check is an O(1)
+        emptiness test instead of a scan over entry_ids — on long traces
+        awaiting thousands of entries the scan was itself a hot spot.
+        Schedule-preserving: no events are added or removed."""
+        if self.engine == "legacy":
+            def done() -> bool:
+                return all(
+                    self.metrics.traces.get(e) is not None
+                    and self.metrics.traces[e].committed
+                    for e in entry_ids
+                )
 
-        self.sim.run_until(self.sim.now + max_time, stop=done)
-        return done()
+            self.sim.run_until(self.sim.now + max_time, stop=done)
+            return done()
+        # No early return when pending is already empty: the scan-based
+        # engine still ran up to check_every events before its first stop
+        # check, and skipping them here would fork the schedule.
+        traces = self.metrics.traces
+        pending = {
+            e for e in entry_ids
+            if (t := traces.get(e)) is None or not t.committed
+        }
+        self.metrics.watch_commits(pending)
+        try:
+            self.sim.run_until(self.sim.now + max_time, stop=lambda: not pending)
+        finally:
+            self.metrics.unwatch_commits(pending)
+        return not pending
 
     def run_until_leader(self, max_time: float = 10_000.0) -> Optional[NodeId]:
         def has_leader() -> bool:

@@ -49,7 +49,7 @@ def recovery_threshold(m: int) -> int:
     return fast_quorum(m) + majority(m) - m
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class ClusterConfig:
     """First-class, log-replicated cluster configuration.
 
@@ -81,6 +81,11 @@ class ClusterConfig:
     voters: Tuple[NodeId, ...]
     learners: Tuple[NodeId, ...] = ()
     old_voters: Optional[Tuple[NodeId, ...]] = None
+    # Lazily computed members cache; must be a declared field now that the
+    # class is slotted (object.__setattr__ needs a slot to land in).
+    _members_cache: Optional[Tuple[NodeId, ...]] = dataclasses.field(
+        default=None, init=False, compare=False, repr=False
+    )
 
     @staticmethod
     def of(
@@ -191,21 +196,32 @@ class SlotState(enum.Enum):
     FINALIZED = "finalized"  # fast-track proposal that reached ceil(3M/4)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class EntryId:
     """Globally unique identity of a proposed command (origin + sequence).
 
     Used to key fast-track votes and to deduplicate client retries.
+    Hashed on every dedup-table probe, vote tally, and entry-index lookup,
+    so the hash is computed once at construction instead of per probe.
     """
 
     origin: NodeId
     seq: int
+    _hash: int = dataclasses.field(
+        default=0, init=False, repr=False, compare=False
+    )
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "_hash", hash((self.origin, self.seq)))
+
+    def __hash__(self) -> int:
+        return self._hash
 
     def __str__(self) -> str:  # compact for logs
         return f"{self.origin}#{self.seq}"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Entry:
     term: int
     command: Any
@@ -220,7 +236,7 @@ class Entry:
         return Entry(self.term, self.command, self.entry_id, self.proposed_at)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Slot:
     entry: Entry
     state: SlotState
@@ -250,7 +266,7 @@ def entry_from_wire(d: Dict[str, Any]) -> Entry:
     )
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Snapshot:
     """A compacted committed prefix of the log (indexes 1..last_index).
 
@@ -273,6 +289,11 @@ class Snapshot:
     members: Tuple[NodeId, ...] = ()
     dedup: Any = None
     config: Optional[ClusterConfig] = None
+    # Cached wire size (see size_bytes); a declared field because the class
+    # is slotted. Excluded from comparison/repr — it's derived state.
+    _wire_bytes: Optional[int] = dataclasses.field(
+        default=None, init=False, compare=False, repr=False
+    )
 
     def cluster_config(self) -> ClusterConfig:
         """The config this snapshot pins, with the v1 legacy-load path:
@@ -365,20 +386,20 @@ def snapshot_from_bytes(data: bytes) -> Snapshot:
 # --------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Message:
     term: int
     src: NodeId = ""
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class RequestVoteArgs(Message):
     candidate_id: NodeId = ""
     last_log_index: int = 0
     last_log_term: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class PreVoteArgs(Message):
     """PreVote probe (Raft dissertation section 9.6 / etcd PreVote).
 
@@ -394,7 +415,7 @@ class PreVoteArgs(Message):
     last_log_term: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class PreVoteReply(Message):
     """``term`` is the voter's REAL current term (standard term rules apply
     to the reply: a higher one cancels the probe). ``prospective_term``
@@ -405,7 +426,7 @@ class PreVoteReply(Message):
     prospective_term: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class RequestVoteReply(Message):
     vote_granted: bool = False
     # Fast Raft recovery: voters ship a summary of their tentative tail so a
@@ -415,7 +436,7 @@ class RequestVoteReply(Message):
     last_log_index: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class AppendEntriesArgs(Message):
     leader_id: NodeId = ""
     prev_log_index: int = 0
@@ -442,14 +463,14 @@ class AppendEntriesArgs(Message):
     read_wm_ts: float = -1.0e18
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class AppendEntriesReply(Message):
     success: bool = False
     match_index: int = 0
     hb_id: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InstallSnapshotArgs(Message):
     """Leader -> lagging follower whose needed entries were compacted away."""
 
@@ -458,14 +479,14 @@ class InstallSnapshotArgs(Message):
     leader_commit: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InstallSnapshotReply(Message):
     # match_index == snapshot.last_index on success; the leader resumes
     # normal AppendEntries pipelining from there.
     match_index: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InstallSnapshotChunk(Message):
     """One chunk of a serialized snapshot (``RaftConfig.snapshot_chunk_bytes``
     > 0). The snapshot identity is (last_index, last_term): a chunk for a
@@ -490,7 +511,7 @@ class InstallSnapshotChunk(Message):
     leader_commit: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InstallSnapshotChunkReply(Message):
     """``next_offset`` is the follower's authoritative write cursor — the
     resume point. The leader adopts it verbatim (a follower that crashed
@@ -503,7 +524,7 @@ class InstallSnapshotChunkReply(Message):
     match_index: int = 0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ForwardOperation(Message):
     """Classic track from a non-leader: relay the command to the leader.
 
@@ -516,7 +537,7 @@ class ForwardOperation(Message):
     batch: Tuple = ()  # Tuple[Tuple[Any, EntryId], ...]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class FastPropose(Message):
     """Fast track round 1: proposer -> ALL nodes.
 
@@ -531,7 +552,7 @@ class FastPropose(Message):
     window: Tuple[Entry, ...] = ()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class FastVote(Message):
     """Fast track round 2: acceptor -> leader, voting for (index, entry_id).
 
@@ -546,7 +567,7 @@ class FastVote(Message):
     window_votes: Tuple[Optional[EntryId], ...] = ()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class FastFinalize(Message):
     """Fast track round 3: leader -> ALL, the slot reached ceil(3M/4).
 
@@ -561,7 +582,7 @@ class FastFinalize(Message):
     window: Tuple[Entry, ...] = ()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReadIndexProbe(Message):
     """Leader -> ALL: one leadership-confirmation round for pending
     linearizable reads (the ReadIndex protocol). ``probe_id`` comes from the
@@ -580,13 +601,13 @@ class ReadIndexProbe(Message):
     read_wm_ts: float = -1.0e18
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReadIndexProbeReply(Message):
     probe_id: int = 0
     ok: bool = False
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReadQuery(Message):
     """Non-leader -> leader: relay a linearizable read. ``read_id`` is the
     client-side identity (origin + seq, EntryId-shaped but NEVER entered in
@@ -597,7 +618,7 @@ class ReadQuery(Message):
     query: Any = None
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReadReply(Message):
     """Leader -> read origin. ``served_index`` is the leader's last_applied
     at serve time (>= the captured read index) — what the read-oracle
@@ -618,7 +639,7 @@ class ReadReply(Message):
     batch: Tuple = ()  # Tuple[Tuple[EntryId, Any], ...]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ClientReply(Message):
     ok: bool = False
     entry_id: Optional[EntryId] = None
@@ -627,7 +648,7 @@ class ClientReply(Message):
 
 
 # Hierarchical tier (pod leaders) wraps inner messages with routing metadata.
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class TierEnvelope(Message):
     """Envelope for global-tier traffic routed between pod leaders.
 

@@ -1,0 +1,242 @@
+"""Schedule equivalence between the slotted and legacy engines.
+
+The slotted engine (typed event records on the global heap, incremental
+quorum/commit/durable-prefix trackers, idle-tick early-outs, watcher-based
+stop conditions) must be a pure representation change: for any seed and
+any fault schedule, both engines retire the SAME events at the SAME times
+and every observable — commit histories, apply order, leader terms,
+metrics counters, trace timestamps, final logs — is byte-identical.
+
+Three layers of evidence:
+
+* a deterministic chaos scenario (partitions, crashes, reads, batched
+  submits, commit-awaits over already-committed sets — the stop-check
+  overshoot corner) for both protocols, flat and hierarchical;
+* a hypothesis sweep over random seeds and op schedules;
+* the full ``tests/regressions/`` trace corpus replayed under the legacy
+  engine (the slotted replay already runs in test_regressions.py).
+"""
+from __future__ import annotations
+
+import glob
+import os
+
+import pytest
+
+from repro.core.fuzzer import replay_trace_file
+from repro.core.hierarchy import HierarchicalCluster
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster
+from repro.core.statemachine import KVMachine
+
+TRACE_DIR = os.path.join(os.path.dirname(__file__), "regressions")
+TRACES = sorted(glob.glob(os.path.join(TRACE_DIR, "*.json")))
+
+
+def fingerprint(c: Cluster) -> dict:
+    """Every engine-observable output of a run, in comparable form."""
+    m = c.metrics
+    return {
+        "now": c.sim.now,
+        "events": c.sim.events,
+        "counters": dict(m.counters),
+        "committed_at": {i: str(e) for i, e in m.committed_at.items()},
+        "applied": {nid: list(seq) for nid, seq in m.applied.items()},
+        "leaders": {t: sorted(s) for t, s in m.leaders.items()},
+        "traces": sorted(
+            (str(e), t.submitted_at, t.first_commit_at, t.fallbacks)
+            for e, t in m.traces.items()
+        ),
+        "logs": {
+            nid: [
+                (str(s.entry.entry_id), s.entry.term, s.state.name)
+                for s in node.log
+            ]
+            for nid, node in c.nodes.items()
+        },
+        "terms": {nid: node.term for nid, node in c.nodes.items()},
+    }
+
+
+def chaos_scenario(engine: str, protocol: str, seed: int) -> dict:
+    c = Cluster(
+        n=5, protocol=protocol, seed=seed, loss=0.05, jitter=1.0,
+        config=RaftConfig(pre_vote=True, check_quorum=True,
+                          lease_duration_ms=120.0, clock_skew_ms=20.0,
+                          max_batch_entries=8),
+        state_machine_factory=lambda nid: KVMachine(),
+        clock_skew_ms=20.0, clock_drift=0.0001, engine=engine,
+    )
+    c.run_until_leader(30_000)
+    nids = list(c.nodes)
+    writes = []
+    lead = c.leader() or nids[0]
+    writes += c.submit_batch([f"a{i}=1" for i in range(6)], via=lead)
+    c.run_until_committed(writes, 10_000)
+    # Await an all-committed set: the scan engine still ran up to
+    # check_every events here, and the watcher engine must too.
+    c.run_until_committed(writes, 10_000)
+    others = [x for x in nids if x != lead]
+    c.partition([lead] + others[:2], others[2:])
+    writes += c.submit_batch([f"b{i}=2" for i in range(6)], via=lead)
+    c.run_until_committed(writes, 10_000)
+    c.heal()
+    c.run(500.0)
+    c.crash(others[0])
+    writes += [c.submit(f"c{i}=3", via=lead) for i in range(3)]
+    c.run(800.0)
+    c.restart(others[0])
+    c.run_until_committed(writes, 20_000)
+    rid = c.read("a0", via=c.leader() or lead)
+    c.run_until_reads([rid], 10_000)
+    c.run(2000.0)
+    c.check_log_consistency()
+    return fingerprint(c)
+
+
+@pytest.mark.parametrize("protocol", ["raft", "fastraft"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_flat_chaos_equivalence(protocol, seed):
+    assert chaos_scenario("slotted", protocol, seed) == chaos_scenario(
+        "legacy", protocol, seed
+    )
+
+
+def hierarchy_scenario(engine: str, seed: int) -> dict:
+    h = HierarchicalCluster(
+        n_pods=3, hosts_per_pod=3, seed=seed,
+        local_loss=0.02, global_loss=0.05, jitter=0.5, engine=engine,
+    )
+    h.bootstrap(30_000)
+    eids = [h.propose_global(f"g{i}=1", via_pod="pod0") for i in range(4)]
+    h.run_until_globally_committed(eids, 30_000)
+    h.run_until_globally_committed(eids, 30_000)  # overshoot corner
+    h.partition_pod("pod1")
+    h.run(1000.0)
+    h.heal_pod("pod1")
+    eids += [h.propose_global(f"h{i}=2", via_pod="pod1") for i in range(3)]
+    h.run_until_globally_committed(eids, 30_000)
+    h.crash_pod_leader("pod2")
+    h.run(2000.0)
+    h.run_until_delivered(len(eids), 60_000)
+    h.check_consistency()
+    return {
+        "now": h.sim.now,
+        "events": h.sim.events,
+        "counters": dict(h.global_metrics.counters),
+        "traces": sorted(
+            (str(e), t.submitted_at, t.first_commit_at)
+            for e, t in h.global_metrics.traces.items()
+        ),
+        "delivered": {pod: list(h.delivered[pod]) for pod in h.pod_ids},
+        "pod_now": {pod: h.pods[pod].metrics.counters.get("msgs_out", 0)
+                    for pod in h.pod_ids},
+    }
+
+
+def test_hierarchy_equivalence():
+    assert hierarchy_scenario("slotted", 5) == hierarchy_scenario("legacy", 5)
+
+
+@pytest.mark.parametrize(
+    "path", TRACES, ids=[os.path.splitext(os.path.basename(p))[0] for p in TRACES]
+)
+def test_regression_corpus_replays_under_legacy_engine(path):
+    report = replay_trace_file(path, engine="legacy")
+    assert report.ok, report.error
+
+
+@pytest.mark.parametrize("seed", [1, 2, 5, 9, 17, 23])
+def test_derived_schedules_equivalent(seed):
+    """Seed-derived pseudo-random op schedules (no hypothesis needed):
+    the same coverage shape as the randomized sweep below, guaranteed to
+    run on minimal installs."""
+    import random
+
+    rng = random.Random(seed * 9176 + 13)
+    kinds = ["submit", "submit", "run", "run", "crash", "restart",
+             "partition", "heal"]
+    ops = [(rng.choice(kinds), rng.randrange(1, 5)) for _ in range(8)]
+    assert apply_ops("slotted", seed, "fastraft", ops) == apply_ops(
+        "legacy", seed, "fastraft", ops
+    )
+
+
+# --------------------------------------------------------------------------
+# Randomized sweep: hypothesis picks the seed and the op schedule; both
+# engines must agree on every example. Guarded (not module-level
+# importorskip) so the deterministic tests above always run.
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+
+def apply_ops(engine: str, seed: int, protocol: str, ops) -> dict:
+    c = Cluster(
+        n=5, protocol=protocol, seed=seed, loss=0.03, jitter=1.0,
+        config=RaftConfig(pre_vote=True, check_quorum=True),
+        engine=engine,
+    )
+    c.run_until_leader(30_000)
+    nids = list(c.nodes)
+    writes = []
+    for kind, arg in ops:
+        if kind == "submit":
+            writes.append(c.submit(f"w{len(writes)}", via=nids[arg]))
+            c.run_until_committed(writes, 5_000)
+        elif kind == "crash":
+            if c.nodes[nids[arg]].alive:
+                c.crash(nids[arg])
+        elif kind == "restart":
+            if not c.nodes[nids[arg]].alive:
+                c.restart(nids[arg])
+        elif kind == "partition":
+            side = [x for x in nids if x != nids[arg]]
+            c.partition([nids[arg]], side)
+        elif kind == "heal":
+            c.heal()
+        else:
+            c.run(arg * 150.0)
+    c.heal()
+    c.run_until_committed(writes, 20_000)
+    c.run(1000.0)
+    return fingerprint(c)
+
+
+if HAVE_HYPOTHESIS:
+    op_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(0, 4)),
+            st.tuples(st.just("crash"), st.integers(0, 4)),
+            st.tuples(st.just("restart"), st.integers(0, 4)),
+            st.tuples(st.just("partition"), st.integers(0, 4)),
+            st.tuples(st.just("heal"), st.just(0)),
+            st.tuples(st.just("run"), st.integers(1, 6)),
+        ),
+        min_size=3,
+        max_size=10,
+    )
+
+    @settings(
+        max_examples=12,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        seed=st.integers(0, 10_000),
+        protocol=st.sampled_from(["raft", "fastraft"]),
+        ops=op_strategy,
+    )
+    def test_random_schedules_equivalent(seed, protocol, ops):
+        assert apply_ops("slotted", seed, protocol, ops) == apply_ops(
+            "legacy", seed, protocol, ops
+        )
+else:  # keep the skip visible in reports instead of silently absent
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_schedules_equivalent():
+        pass
