@@ -1,128 +1,201 @@
-"""Generate the EXPERIMENTS.md §Roofline table and §Perf before/after
-comparison from artifacts (dryrun_baseline = iteration-0/1 state, dryrun =
-final state, perf = per-variant knob runs).
+"""Render collected ``BENCH_*.json`` artifacts as a markdown perf report.
 
-  PYTHONPATH=src python -m benchmarks.perf_report
+Reads the artifact directory produced by ``benchmarks/run.py`` (default
+``bench-out/``) and prints one headline-metric table, optionally with a
+baseline column for before/after comparison::
+
+  PYTHONPATH=src python benchmarks/perf_report.py                       # bench-out/
+  PYTHONPATH=src python benchmarks/perf_report.py --dir new --baseline old
+
+Each headline is extracted from the benchmark's own row schema (see
+docs/benchmarks.md); artifacts that are missing are skipped, so the
+report works on partial runs (e.g. a single ``run.py --only`` entry).
 """
 from __future__ import annotations
 
-import glob
+import argparse
 import json
 import os
+from typing import Dict, List, Optional, Tuple
 
-from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, analyze_cell,
-                                 build_table, calibrate, model_flops)
-
-PERF_DIR = os.path.join("artifacts", "perf")
+Headline = Tuple[str, float, str]  # (label, value, unit)
 
 
-def fmt_s(x):
-    if x != x:
-        return "--"
-    if x >= 1:
-        return f"{x:.2f}s"
-    return f"{x*1e3:.1f}ms"
-
-
-def roofline_markdown(mesh="single", artifact_root="artifacts/dryrun"):
-    calib = calibrate()
-    import benchmarks.roofline as R
-
-    old = R.ARTIFACT_DIR
-    R.ARTIFACT_DIR = artifact_root
-    try:
-        rows = build_table(mesh, calib)
-    finally:
-        R.ARTIFACT_DIR = old
-    lines = [
-        "| arch | shape | compute | memory | collective | dominant | useful | roofline |",
-        "|---|---|---:|---:|---:|---|---:|---:|",
-    ]
-    for r in rows:
-        if "skipped" in r:
-            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — |")
-            continue
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
-            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
-            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |"
-        )
-    return "\n".join(lines), rows
-
-
-def variant_row(arch, shape, variant, calib):
-    path = os.path.join(PERF_DIR, f"{arch}__{shape}__{variant}.json")
+def _load(dirname: str, name: str) -> Optional[List[Dict]]:
+    path = os.path.join(dirname, f"BENCH_{name}.json")
     if not os.path.exists(path):
         return None
-    d = json.load(open(path))
-    deep = d.get("hlo_analysis")
-    if deep:
-        flops, b, coll = deep["flops"], deep["bytes_accessed"], deep["collective_bytes"]
-        counts = {k: int(v) for k, v in deep["collective_counts"].items()}
-    else:
-        cost = d["cost_analysis"]
-        flops = cost.get("flops", float("nan")) * calib
-        b = cost.get("bytes accessed", float("nan"))
-        coll = d["collectives"]["total_bytes"]
-        counts = d["collectives"]["counts"]
-    return {
-        "variant": variant,
-        "compute_s": flops / PEAK_FLOPS,
-        "memory_s": b / HBM_BW,
-        "collective_s": coll / ICI_BW,
-        "counts": counts,
-    }
+    with open(path) as f:
+        rows = json.load(f)
+    return rows or None
 
 
-def perf_markdown(cells):
-    calib = calibrate()
+def _throughput(rows: List[Dict]) -> List[Headline]:
+    # Rows are heterogeneous (plain load, batching-comparison rows with a
+    # `speedup` key, adaptive-batching score rows); headline each kind.
+    best: Dict[str, float] = {}
+    for r in rows:
+        p, v = r["protocol"], r.get("ops_per_sec")
+        if p.startswith("window-"):  # coalesce-window score grid, not load
+            continue
+        if v is not None and v > best.get(p, 0.0):
+            best[p] = v
+    out = [(f"throughput/{p}_peak", v, "ops/s") for p, v in sorted(best.items())]
+    if best.get("raft") and best.get("fastraft"):
+        out.append(
+            ("throughput/fastraft_vs_raft", best["fastraft"] / best["raft"], "x")
+        )
+    batched = [r["speedup"] for r in rows if "speedup" in r]
+    if batched:
+        out.append(("throughput/batching_speedup", max(batched), "x"))
+    return out
+
+
+def _read_latency(rows: List[Dict]) -> List[Headline]:
     out = []
-    for arch, shape, variants in cells:
-        out.append(f"\n**{arch} × {shape}**\n")
-        out.append("| variant | compute | memory | collective | collective ops |")
-        out.append("|---|---:|---:|---:|---|")
-        for v in variants:
-            r = variant_row(arch, shape, v, calib)
-            if r is None:
-                continue
-            cnt = ",".join(f"{k}:{n}" for k, n in sorted(r["counts"].items()))
-            out.append(
-                f"| {v} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
-                f"{fmt_s(r['collective_s'])} | {cnt} |"
-            )
-    return "\n".join(out)
+    for kind in ("lease_reads", "readindex_reads"):
+        served = [r for r in rows if r.get(kind, 0) > 0 and r.get("loss") == 0.0]
+        if served:
+            v = min(r["mean_read_latency_ms"] for r in served)
+            out.append((f"read_latency/{kind.replace('_reads', '')}", v, "ms"))
+    return out
 
 
-def main():
-    md, rows = roofline_markdown("single", "artifacts/dryrun")
-    print("## Final roofline (single pod, per device)\n")
-    print(md)
-    if os.path.isdir("artifacts/dryrun_baseline"):
-        md_b, rows_b = roofline_markdown("single", "artifacts/dryrun_baseline")
-        by_key = {(r.get("arch"), r.get("shape")): r for r in rows_b}
-        print("\n## Baseline -> final dominant-term movement\n")
-        print("| arch | shape | dominant | baseline | final | delta |")
-        print("|---|---|---|---:|---:|---:|")
-        for r in rows:
-            if "skipped" in r:
-                continue
-            b = by_key.get((r["arch"], r["shape"]))
-            if not b or "skipped" in b:
-                continue
-            k = r["dominant"] + "_s"
-            bk = b.get(k, float("nan"))
-            fk = r.get(k, float("nan"))
-            if bk == bk and fk == fk and bk > 0:
-                print(f"| {r['arch']} | {r['shape']} | {r['dominant']} | "
-                      f"{fmt_s(bk)} | {fmt_s(fk)} | {100*(fk-bk)/bk:+.0f}% |")
-    cells = [
-        ("llama4-scout-17b-a16e", "train_4k", ["classic", "fast", "stream"]),
-        ("qwen3-1.7b", "train_4k", ["classic", "fast", "stream"]),
-        ("qwen3-4b", "decode_32k", ["fsdpserve", "tponly"]),
+def _read_scaleout(rows: List[Dict]) -> List[Headline]:
+    return [
+        (
+            "read_scaleout/agg_reads_peak",
+            max(r["agg_reads_per_sec"] for r in rows),
+            "reads/s",
+        )
     ]
-    print("\n## Hillclimb variants\n")
-    print(perf_markdown(cells))
+
+
+def _membership_churn(rows: List[Dict]) -> List[Headline]:
+    at0 = [r for r in rows if r.get("loss") == 0.0]
+    return [
+        (
+            "membership_churn/worst_gap",
+            max(r["gap_timeouts"] for r in at0),
+            "election timeouts",
+        )
+    ]
+
+
+def _snapshot(rows: List[Dict]) -> List[Headline]:
+    done = [r for r in rows if r.get("caught_up")]
+    if not done:
+        return []
+    return [
+        ("snapshot/fastest_catch_up", min(r["catch_up_ms"] for r in done), "sim-ms")
+    ]
+
+
+def _sim_speed(rows: List[Dict]) -> List[Headline]:
+    by_engine: Dict[str, float] = {}
+    for r in rows:
+        if "events_per_sec" not in r:  # engine-comparison rows carry `speedup`
+            continue
+        e = r.get("engine", "?")
+        by_engine[e] = max(by_engine.get(e, 0.0), r["events_per_sec"])
+    out = [
+        (f"sim_speed/{e}_peak", v, "events/s") for e, v in sorted(by_engine.items())
+    ]
+    speedups = [r["speedup"] for r in rows if "speedup" in r]
+    if speedups:
+        out.append(("sim_speed/slotted_vs_legacy", max(speedups), "x"))
+    return out
+
+
+def _unreliable(rows: List[Dict]) -> List[Headline]:
+    out = []
+    scale = [r for r in rows if r.get("experiment") == "scaleout"]
+    if scale:
+        n = max(int(r["n"]) for r in scale)
+        arms = {bool(r["witnesses"]): r for r in scale if int(r["n"]) == n}
+        if True in arms and False in arms:
+            full = arms[False]["committed_ops_per_sec"]
+            out.append(
+                (
+                    f"unreliable/witness_vs_full_n{n}",
+                    arms[True]["committed_ops_per_sec"] / max(full, 1e-9),
+                    "x",
+                )
+            )
+    by_exp = {r["experiment"]: r for r in rows}
+    if "weighted" in by_exp and "unweighted" in by_exp:
+        for k in ("unweighted", "weighted"):
+            out.append(
+                (f"unreliable/elections_{k}", by_exp[k]["elections"], "elections")
+            )
+    return out
+
+
+EXTRACTORS = [
+    ("throughput", _throughput),
+    ("read_latency", _read_latency),
+    ("read_latency_scaleout", _read_scaleout),
+    ("membership_churn", _membership_churn),
+    ("snapshot_transfer", _snapshot),
+    ("sim_speed", _sim_speed),
+    ("unreliable_scaleout", _unreliable),
+]
+
+
+def collect(dirname: str) -> List[Headline]:
+    out: List[Headline] = []
+    for name, fn in EXTRACTORS:
+        rows = _load(dirname, name)
+        if rows is None:
+            continue
+        try:
+            out.extend(fn(rows))
+        except (KeyError, ValueError) as e:  # schema drift: flag, don't die
+            out.append((f"{name}/UNREADABLE_{type(e).__name__}", float("nan"), ""))
+    return out
+
+
+def _fmt(v: float) -> str:
+    if v != v:
+        return "--"
+    if abs(v) >= 1000:
+        return f"{v:,.0f}"
+    return f"{v:.2f}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default="bench-out", help="artifact directory")
+    ap.add_argument(
+        "--baseline", metavar="DIR",
+        help="second artifact directory for a before/after delta column",
+    )
+    args = ap.parse_args(argv)
+
+    current = collect(args.dir)
+    if not current:
+        print(f"no BENCH_*.json artifacts in {args.dir}/ — run benchmarks/run.py first")
+        return 1
+    base = dict()
+    if args.baseline:
+        base = {label: v for label, v, _ in collect(args.baseline)}
+
+    print(f"## Benchmark report ({args.dir})\n")
+    if base:
+        print("| metric | value | unit | baseline | delta |")
+        print("|---|---:|---|---:|---:|")
+    else:
+        print("| metric | value | unit |")
+        print("|---|---:|---|")
+    for label, v, unit in current:
+        if base:
+            b = base.get(label, float("nan"))
+            delta = f"{100 * (v - b) / b:+.0f}%" if b == b and b else "--"
+            print(f"| {label} | {_fmt(v)} | {unit} | {_fmt(b)} | {delta} |")
+        else:
+            print(f"| {label} | {_fmt(v)} | {unit} |")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,71 +1,122 @@
-"""Benchmark harness: one entry per paper table/figure + the roofline
-report. Prints ``name,us_per_call,derived`` CSV rows (us_per_call is
-simulated commit latency in microseconds where applicable)."""
+"""Benchmark suite orchestrator: run every entry point, collect artifacts.
+
+Runs each benchmark under ``benchmarks/`` as its own process (exactly the
+way CI's bench-smoke lane does) and collects the ``--json`` artifacts into
+one directory, default ``bench-out/``::
+
+  PYTHONPATH=src python benchmarks/run.py --smoke            # CI-sized
+  PYTHONPATH=src python benchmarks/run.py --out bench-out    # full grids
+
+Each artifact lands as ``bench-out/BENCH_<name>.json`` — a JSON list of
+flat row dicts (see docs/benchmarks.md for per-benchmark schemas).
+Benchmarks without a ``--json`` flag (pure-CSV tables) get their stdout
+captured to ``bench-out/BENCH_<name>.csv`` instead. A non-zero exit from
+any benchmark (a failed internal assertion or ``--check`` floor) fails
+the whole run after the remaining benchmarks finish.
+
+After the suite, ``perf_report.py`` renders the collected artifacts into
+a markdown summary (optionally against a baseline directory).
+"""
 from __future__ import annotations
 
-import time
+import argparse
+import os
+import subprocess
+import sys
+from typing import List, Optional, Tuple
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(BENCH_DIR)
+
+# (name, module flags, supports --smoke, supports --json)
+SUITE: List[Tuple[str, List[str], bool, bool]] = [
+    ("throughput", ["--workload", "kv", "--read-ratio", "0.75"], True, True),
+    ("snapshot_transfer", [], True, True),
+    ("read_latency", [], True, True),
+    ("read_latency_scaleout", ["--scale-out"], True, True),
+    ("membership_churn", [], True, True),
+    ("unreliable_scaleout", ["--check"], True, True),
+    ("sim_speed", ["--check"], True, True),
+    ("latency_vs_loss", [], False, False),
+    ("rounds_to_commit", [], False, False),
+]
+
+# Entries whose name differs from their module (same module, different flags).
+MODULE_OF = {"read_latency_scaleout": "read_latency"}
 
 
-def main() -> None:
-    rows = []
+def run_one(
+    name: str, flags: List[str], smoke: bool, has_smoke: bool, has_json: bool,
+    out_dir: str,
+) -> int:
+    module = MODULE_OF.get(name, name)
+    cmd = [sys.executable, os.path.join(BENCH_DIR, f"{module}.py"), *flags]
+    if smoke and has_smoke:
+        cmd.append("--smoke")
+    json_path = os.path.join(out_dir, f"BENCH_{name}.json")
+    if has_json:
+        cmd += ["--json", json_path]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    print(f"== {name}: {' '.join(cmd[1:])}")
+    proc = subprocess.run(
+        cmd, cwd=REPO_ROOT, env=env, capture_output=True, text=True
+    )
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stdout.write(proc.stderr)
+        print(f"== {name}: FAILED (exit {proc.returncode})")
+    elif not has_json:
+        # CSV-table benchmarks: the stdout IS the artifact.
+        with open(os.path.join(out_dir, f"BENCH_{name}.csv"), "w") as f:
+            f.write(proc.stdout)
+    return proc.returncode
 
-    # Figure 1: latency vs packet loss (Raft vs Fast Raft).
-    from benchmarks import latency_vs_loss
 
-    fig1 = latency_vs_loss.sweep(n_seeds=3, n_ops=20)
-    for r in fig1:
-        rows.append((
-            f"fig1/{r['protocol']}/loss={r['loss']:.2f}",
-            r["mean_latency"] * 1e3,  # sim-ms -> us
-            f"commit_rate={r['commit_rate']:.3f};fallback={r['fallback_fraction']:.2f}",
-        ))
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized grids (what the bench-smoke lane runs)",
+    )
+    ap.add_argument(
+        "--out", default="bench-out", metavar="DIR",
+        help="artifact directory (default bench-out/)",
+    )
+    ap.add_argument(
+        "--only", metavar="NAME",
+        help="run a single suite entry by name (see --list)",
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="list suite entries and exit",
+    )
+    args = ap.parse_args(argv)
 
-    # Table: message rounds to commit (the core Fast Raft claim).
-    from benchmarks import rounds_to_commit
+    if args.list:
+        for name, flags, has_smoke, has_json in SUITE:
+            extra = " ".join(flags)
+            print(f"{name:24s} {MODULE_OF.get(name, name)}.py {extra}")
+        return 0
 
-    for proto in ("raft", "fastraft"):
-        for via_leader in (True, False):
-            rounds = rounds_to_commit.measure(proto, via_leader)
-            rows.append((
-                f"rounds/{proto}/{'leader' if via_leader else 'follower'}",
-                rounds * rounds_to_commit.L * 1e3,
-                f"rounds={rounds:.2f}",
-            ))
-
-    # Table: throughput under bursty load.
-    from benchmarks import throughput
-
-    for proto in ("raft", "fastraft"):
-        for burst in (4, 16):
-            r = throughput.run(proto, burst, n_bursts=3)
-            rows.append((
-                f"throughput/{proto}/burst={burst}",
-                r["mean_latency"] * 1e3,
-                f"ops_per_s={r['ops_per_sec']:.1f};fast_share={r['fast_share']:.2f}",
-            ))
-
-    # Roofline over dry-run artifacts (skipped gracefully if not yet run).
-    try:
-        from benchmarks import roofline
-
-        table = roofline.build_table("single")
-        for r in table:
-            if "skipped" in r:
-                rows.append((f"roofline/{r['arch']}/{r['shape']}", float("nan"),
-                             "skipped"))
-            else:
-                rows.append((
-                    f"roofline/{r['arch']}/{r['shape']}",
-                    r["step_s_bound"] * 1e6,
-                    f"dominant={r['dominant']};roofline_frac={r['roofline_frac']:.3f}",
-                ))
-    except Exception as e:  # artifacts missing
-        rows.append(("roofline", float("nan"), f"unavailable:{type(e).__name__}"))
-
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    entries = [e for e in SUITE if args.only is None or e[0] == args.only]
+    if not entries:
+        print(f"unknown benchmark {args.only!r}; use --list")
+        return 2
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for name, flags, has_smoke, has_json in entries:
+        rc = run_one(name, flags, args.smoke, has_smoke, has_json, args.out)
+        if rc != 0:
+            failures.append(name)
+    print(
+        f"\n{len(entries)} benchmarks, {len(failures)} failed"
+        + (f": {', '.join(failures)}" if failures else "")
+        + f" · artifacts in {args.out}/"
+    )
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

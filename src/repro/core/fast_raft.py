@@ -69,7 +69,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Set, Tuple
 
-from repro.core.raft import Outputs, RaftNode, is_config_command
+from repro.core.raft import Outputs, RaftNode, is_config_command, skeleton_entry
 from repro.core.types import (
     AppendEntriesArgs,
     Entry,
@@ -260,7 +260,11 @@ class FastRaftNode(RaftNode):
         else:
             held = self.fast_slots.get(index)
             if held is None:
-                self.fast_slots[index] = Slot(entry.clone(), SlotState.TENTATIVE)
+                # Witness acceptors hold payload-free skeletons even in the
+                # fast-slot overlay; FCFS conflict detection only compares
+                # EntryIds (same_entry), so votes are unaffected.
+                e = skeleton_entry(entry) if self.is_witness() else entry.clone()
+                self.fast_slots[index] = Slot(e, SlotState.TENTATIVE)
                 self._next_fast_hint = max(self._next_fast_hint, index)
             elif not held.entry.same_entry(entry):
                 self._count("fast_conflicts")

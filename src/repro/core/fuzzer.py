@@ -63,11 +63,60 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.manager import SnapshotStore
 from repro.core.raft import RaftConfig
-from repro.core.sim import Adversary, Cluster
+from repro.core.sim import Adversary, Cluster, FailureProfile
 from repro.core.statemachine import KVMachine
 from repro.core.types import EntryId
 
 TRACE_VERSION = 1
+
+
+def preset_failure_profiles(
+    name: str, nodes: List[str]
+) -> Dict[str, FailureProfile]:
+    """Named per-node FailureProfile presets for fuzz sweeps, a pure
+    function of (name, node order) so a trace that records only the
+    preset name replays against the identical fleet.
+
+    - "crashy":      staggered crash/recover renewal on every node, two
+                     correlated-failure groups (the nightly crash-heavy
+                     lane);
+    - "slow-cpu":    a minority of nodes applies 10-40 ms behind commit;
+    - "flaky-links": asymmetric per-node loss/latency multipliers (loss
+                     multipliers only bite when the base network is lossy);
+    - "mixed":       all three at once, milder.
+    """
+    out: Dict[str, FailureProfile] = {}
+    if name == "crashy":
+        for i, nid in enumerate(nodes):
+            out[nid] = FailureProfile(
+                mtbf_ms=3000.0 + 1100.0 * i,
+                mttr_ms=400.0 + 170.0 * i,
+                group=f"g{i % 2}",
+            )
+    elif name == "slow-cpu":
+        for i, nid in enumerate(nodes):
+            if i % 3 == 0:
+                out[nid] = FailureProfile(apply_lag_ms=10.0 + 10.0 * (i % 4))
+    elif name == "flaky-links":
+        for i, nid in enumerate(nodes):
+            out[nid] = FailureProfile(
+                loss_mult=1.0 + 0.8 * (i % 3),
+                latency_mult=1.0 + 0.5 * (i % 4),
+                in_loss_mult=1.0 + 0.4 * ((i + 1) % 3),
+                in_latency_mult=1.0 + 0.25 * ((i + 2) % 4),
+            )
+    elif name == "mixed":
+        for i, nid in enumerate(nodes):
+            out[nid] = FailureProfile(
+                mtbf_ms=6000.0 + 1300.0 * i,
+                mttr_ms=500.0,
+                apply_lag_ms=8.0 if i % 2 else 0.0,
+                latency_mult=1.0 + 0.3 * (i % 3),
+                group=f"g{i % 2}",
+            )
+    elif name:
+        raise ValueError(f"unknown failure profile preset {name!r}")
+    return out
 
 
 @dataclasses.dataclass
@@ -97,6 +146,14 @@ class FuzzProfile:
     # the schedule they failed under, not today's.
     read_coalesce_window: float = 0.0
     election_noop: bool = False
+    # Reliability knobs — same backward-compat rule: "" / 0 reproduce the
+    # pre-knob schedules exactly. ``failure_profile`` names a preset from
+    # :func:`preset_failure_profiles` installed at cluster construction
+    # (crash/recover renewal chaos on top of the op schedule);
+    # ``witnesses`` marks the LAST w founding nodes as quorum-only
+    # witness members.
+    failure_profile: str = ""
+    witnesses: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -195,19 +252,28 @@ class _TraceRunner:
         self.profile = FuzzProfile.from_dict(trace.get("profile", {}))
         self.expect = trace.get("expect", {}) or {}
         self.store = SnapshotStore(store_dir)
+        p = self.profile
+        wits = [f"n{i}" for i in range(p.n - p.witnesses, p.n)] if p.witnesses else []
         self.cluster = Cluster(
-            n=self.profile.n,
-            protocol=self.profile.protocol,
+            n=p.n,
+            protocol=p.protocol,
             seed=trace.get("seed", 0),
-            loss=self.profile.loss,
-            jitter=self.profile.jitter,
-            config=self.profile.raft_config(),
+            loss=p.loss,
+            jitter=p.jitter,
+            config=p.raft_config(),
             snapshot_store=self.store,
             state_machine_factory=lambda nid: KVMachine(),
-            clock_skew_ms=self.profile.clock_skew_ms,
-            clock_drift=self.profile.clock_drift,
+            clock_skew_ms=p.clock_skew_ms,
+            clock_drift=p.clock_drift,
             engine=engine,
+            witnesses=wits,
         )
+        if p.failure_profile:
+            self.cluster.set_failure_profiles(
+                preset_failure_profiles(
+                    p.failure_profile, [f"n{i}" for i in range(p.n)]
+                )
+            )
         self.writes: List[Tuple[EntryId, str]] = []  # every KV write submitted
         self.submit_batches: Dict[str, int] = {}  # origin -> batch count
         self.n_reads_checked = 0
@@ -258,6 +324,18 @@ class _TraceRunner:
             )
         elif kind == "adversary_off":
             c.adversary = None
+        elif kind == "failure_profiles":
+            # Install a named preset over the CURRENT membership (or lift
+            # all profiles with preset "").
+            preset = op.get("preset", "")
+            if preset:
+                c.set_failure_profiles(
+                    preset_failure_profiles(preset, sorted(c.nodes))
+                )
+            else:
+                c.clear_failure_profiles()
+        elif kind == "crash_group":
+            c.crash_group(op.get("group", ""))
         elif kind == "submit":
             via = op.get("via")
             if via in c.nodes and c.nodes[via].alive:
@@ -385,6 +463,7 @@ class _TraceRunner:
         protocol, not a still-partitioned network."""
         c = self.cluster
         c.adversary = None
+        c.clear_failure_profiles()  # stop the crash/recover renewal chaos
         c.heal()
         for nid in list(c.nodes):
             if not c.nodes[nid].alive and c.nodes[nid].is_voter():
@@ -523,6 +602,11 @@ class ProtocolFuzzer:
             (4, "membership"),
         )
         bag = [k for w, k in kinds for _ in range(w)]
+        if p.failure_profile:
+            # Reliability chaos rides on top of the preset installed at
+            # setup: correlated group crashes, plus toggling the profiles
+            # off/on mid-trace (testing install/clear at any point).
+            bag += ["crash_group"] * 3 + ["failure_profiles"] * 2
         for step in range(self.steps):
             kind = rng.choice(bag)
             if kind == "run":
@@ -580,6 +664,16 @@ class ProtocolFuzzer:
                 )
             elif kind == "adversary_off":
                 ops.append({"op": "adversary_off"})
+            elif kind == "crash_group":
+                ops.append({"op": "crash_group", "group": f"g{rng.randint(0, 1)}"})
+                ops.append({"op": "run", "ms": rng.choice([500.0, 1500.0])})
+            elif kind == "failure_profiles":
+                ops.append(
+                    {
+                        "op": "failure_profiles",
+                        "preset": rng.choice(["", p.failure_profile]),
+                    }
+                )
             elif kind == "membership":
                 which = rng.random()
                 if which < 0.4 and len(nodes) > 3:
@@ -795,11 +889,24 @@ def main(argv=None) -> int:
         "intra-pod partitions, global-link adversaries, all read modes) "
         "instead of flat-cluster trace fuzzing",
     )
+    ap.add_argument(
+        "--failure-profile", default="",
+        choices=("", "crashy", "slow-cpu", "flaky-links", "mixed"),
+        help="install a named FailureProfile preset on every node at setup "
+        "and let the fuzzer toggle/crash-group it mid-trace (flat mode only)",
+    )
+    ap.add_argument(
+        "--witnesses", type=int, default=0, metavar="W",
+        help="make the last W founding nodes quorum-only witnesses "
+        "(flat mode only)",
+    )
     args = ap.parse_args(argv)
 
     profile = FuzzProfile(
         read_coalesce_window=args.coalesce_window,
         election_noop=args.election_noop,
+        failure_profile=args.failure_profile,
+        witnesses=args.witnesses,
     )
     rows: List[Dict[str, Any]] = []
     failures = 0

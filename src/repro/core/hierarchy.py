@@ -35,6 +35,7 @@ from repro.core.sim import (
     EV_GTICK,
     Adversary,
     Cluster,
+    FailureProfile,
     LinkModel,
     MembershipError,
     Simulation,
@@ -43,6 +44,111 @@ from repro.core.statemachine import LogListMachine, StateMachine
 from repro.core.types import Entry, EntryId, Message, NodeId
 
 GLOBAL_SHADOW_PREFIX = "__global__:"
+
+
+def coflaky_risk(
+    placement: Dict[str, Sequence[NodeId]], groups: Dict[NodeId, str]
+) -> Dict[str, float]:
+    """Per-pod worst-case correlated-failure exposure: the largest
+    fraction of a pod's hosts that share one failure group (rack, AZ,
+    spot pool — FailureProfile.group). A value >= the pod's majority
+    fraction means ONE group outage silently costs the pod its quorum —
+    the exact co-flakiness the placement policy exists to avoid.
+    Pure function of the placement, so tests and planners can score
+    layouts without simulating."""
+    risk: Dict[str, float] = {}
+    for pod, hosts in placement.items():
+        counts: Dict[str, int] = {}
+        for h in hosts:
+            g = groups.get(h, "")
+            if g:
+                counts[g] = counts.get(g, 0) + 1
+        risk[pod] = max(counts.values(), default=0) / max(1, len(hosts))
+    return risk
+
+
+def plan_coflaky_moves(
+    placement: Dict[str, Sequence[NodeId]],
+    groups: Dict[NodeId, str],
+    max_moves: int = 64,
+) -> List[Tuple[NodeId, str, str]]:
+    """Greedy de-correlation plan, SWAP-based: while some pod has a
+    failure group holding a MAJORITY of its hosts (so one group outage
+    kills the pod's quorum), exchange one host of that group with a
+    differently-grouped host from the pod where the group's presence is
+    smallest. Swapping (rather than one-way moves) keeps every pod at
+    its size — a pod that is 100% one rack can never be fixed by
+    shrinking it, only by mixing other racks in. Each host moves at most
+    once and every accepted swap strictly reduces the offending group's
+    count in the source pod, so the loop terminates; when no safe
+    counterparty exists the plan stops best-effort (with three rack-A
+    hosts spread over two 3-host pods, SOME pod must keep two of them).
+    Returns ``(host, src_pod, dst_pod)`` tuples — two per swap — for
+    :meth:`HierarchicalCluster.move_node`; pure, so the plan is
+    unit-testable without a simulation."""
+    place = {p: list(hs) for p, hs in placement.items()}
+    moved: set = set()
+    moves: List[Tuple[NodeId, str, str]] = []
+
+    def group_counts(hosts: List[NodeId]) -> Dict[str, int]:
+        c: Dict[str, int] = {}
+        for h in hosts:
+            g = groups.get(h, "")
+            if g:
+                c[g] = c.get(g, 0) + 1
+        return c
+
+    while len(moves) + 2 <= max_moves:
+        # Worst offender: the (pod, group) whose loss leaves the fewest
+        # survivors relative to the pod's majority.
+        worst = None  # (share, pod, group)
+        for pod in sorted(place):
+            hosts = place[pod]
+            majority = len(hosts) // 2 + 1
+            for g, c in sorted(group_counts(hosts).items()):
+                if c >= majority and (worst is None or c / len(hosts) > worst[0]):
+                    worst = (c / len(hosts), pod, g)
+        if worst is None:
+            return moves
+        _, src, g = worst
+        outgoing = [
+            h for h in sorted(place[src]) if groups.get(h, "") == g and h not in moved
+        ]
+        if not outgoing:
+            return moves  # every offender already moved once; give up
+        host_out = outgoing[0]
+        # Counterparty pod: smallest presence of g, and receiving the host
+        # must not hand the destination its own g-majority (sizes are
+        # unchanged by a swap, so the majority threshold is today's).
+        swap = None  # (host_in, dst)
+        for pod in sorted(place, key=lambda p: (group_counts(place[p]).get(g, 0), p)):
+            if pod == src:
+                continue
+            if group_counts(place[pod]).get(g, 0) + 1 >= len(place[pod]) // 2 + 1:
+                continue
+            # Counter-host: any unmoved host NOT in group g, preferring
+            # groups the source pod has least of.
+            src_counts = group_counts(place[src])
+            incoming = sorted(
+                (h for h in place[pod]
+                 if groups.get(h, "") != g and h not in moved),
+                key=lambda h: (src_counts.get(groups.get(h, ""), 0), h),
+            )
+            if incoming:
+                swap = (incoming[0], pod)
+                break
+        if swap is None:
+            return moves  # nowhere safe to swap with
+        host_in, dst = swap
+        place[src].remove(host_out)
+        place[dst].append(host_out)
+        place[dst].remove(host_in)
+        place[src].append(host_in)
+        moved.add(host_out)
+        moved.add(host_in)
+        moves.append((host_out, src, dst))
+        moves.append((host_in, dst, src))
+    return moves
 
 
 class GlobalDeliveryMachine(LogListMachine):
@@ -252,6 +358,48 @@ class HierarchicalCluster:
         """Install (or clear) a fault injector on the global tier's links."""
         self.global_adversary = adversary
 
+    # ------------------------------------------------- failure profiles
+
+    def set_failure_profiles(
+        self, profiles: Dict[NodeId, FailureProfile]
+    ) -> None:
+        """Install per-host failure profiles across the hierarchy (host
+        ids are pod-qualified, e.g. ``pod0h1``); each pod cluster receives
+        its own subset and runs the same deterministic per-node schedule
+        machinery as a flat :class:`~repro.core.sim.Cluster`."""
+        for local in self.pods.values():
+            sub = {n: fp for n, fp in profiles.items() if n in local.nodes}
+            if sub:
+                local.set_failure_profiles(sub)
+
+    def clear_failure_profiles(self) -> None:
+        for local in self.pods.values():
+            local.clear_failure_profiles()
+
+    def failure_groups(self) -> Dict[NodeId, str]:
+        """host -> correlated-failure group, from the installed profiles."""
+        groups: Dict[NodeId, str] = {}
+        for local in self.pods.values():
+            for nid, fp in local.failure_profiles.items():
+                if fp.group:
+                    groups[nid] = fp.group
+        return groups
+
+    def placement(self) -> Dict[str, List[NodeId]]:
+        return {pod: sorted(self.pods[pod].nodes) for pod in self.pod_ids}
+
+    def rebalance_coflaky(self, timeout: float = 240_000.0) -> List[PodMove]:
+        """Execute the greedy de-correlation plan (:func:`plan_coflaky_moves`)
+        over the CURRENT placement and installed failure profiles, as live
+        :meth:`move_node` rebalancings. Returns the issued moves; drive
+        them with :meth:`run_until_moved`. No-op (empty list) when no pod
+        concentrates a quorum inside one failure group."""
+        plan = plan_coflaky_moves(self.placement(), self.failure_groups())
+        return [
+            self.move_node(nid, src, dst, timeout=timeout)
+            for nid, src, dst in plan
+        ]
+
     # --------------------------------------------------------- global plumbing
 
     def pod_available(self, pod: str) -> bool:
@@ -438,6 +586,8 @@ class HierarchicalCluster:
             node = local.nodes[nid]
             if not node.alive:
                 continue
+            if node.cluster_config.is_witness(nid):
+                continue  # quorum-only member: no state machine to read
             if node.cluster_config.is_learner(nid):
                 learners.append(nid)
             elif node.role.value != "leader":

@@ -73,6 +73,23 @@ CONFIG_PREFIX = "__config__:"  # membership-change commands
 NOOP_PREFIX = "__noop__:"      # read-barrier no-op (fresh leader, no
                                # current-term commit yet); state machines
                                # ignore it like other infrastructure cmds
+WITNESS_ELIDED = "__witness_elided__"  # payload placeholder in witness logs
+
+
+def skeleton_entry(e: Entry) -> Entry:
+    """The payload-free form of an entry a witness stores/receives: term and
+    EntryId (all the protocol identity — log matching and dedup key on
+    them), command elided. Infrastructure commands (configs, the read
+    barrier no-op) stay intact: a witness must adopt configs at append time
+    like every voter, and they are a few bytes anyway."""
+    cmd = e.command
+    if isinstance(cmd, str) and (
+        cmd.startswith(CONFIG_PREFIX) or cmd.startswith(NOOP_PREFIX)
+    ):
+        return e
+    if cmd == WITNESS_ELIDED:
+        return e
+    return Entry(e.term, WITNESS_ELIDED, e.entry_id, e.proposed_at)
 
 
 def config_command(cfg) -> str:
@@ -189,6 +206,27 @@ class RaftConfig:
     # new read watermark, so on an idle cluster follower/learner reads
     # issued after a leader change would stall until the next write.
     election_noop: bool = False
+    # Reliability-weighted leader election (BlackWater regime, DESIGN.md
+    # §12). When on, a node's election timeout draw is STRETCHED by up to
+    # reliability_election_bias timeout-spreads in proportion to how
+    # unreliable the node currently looks — the product of a recent-uptime
+    # ramp (time since last (re)start over reliability_uptime_ms) and a
+    # leader-contact regularity EWMA. Stable, well-connected nodes keep
+    # their unbiased draw and therefore campaign FIRST after a leader
+    # failure; recently-crashed or flaky-linked nodes yield to them. Pure
+    # liveness shaping: the bias only delays candidacy, never changes who
+    # CAN win, so every safety argument is untouched. Off by default —
+    # the unbiased draw is bit-identical to the seed schedule.
+    reliability_weighted_election: bool = False
+    reliability_election_bias: float = 2.0
+    reliability_uptime_ms: float = 5000.0
+    # Slow-CPU apply lag (failure-profile knob, per-node via
+    # sim.FailureProfile): committed entries apply only once they have
+    # been committed for this many sim-ms, modeling a node whose state
+    # machine cannot keep up with replication. Commit/ack latency is
+    # untouched — the node acks and votes at full speed; only its applied
+    # state (and thus replica-read freshness) trails. 0 = apply inline.
+    apply_lag_ms: float = 0.0
 
 
 @dataclasses.dataclass(slots=True)
@@ -362,6 +400,21 @@ class RaftNode:
         # vote replies, not through up-to-dateness.
         self._ack_floor: Tuple[int, int] = (0, 0)  # (term, index)
 
+        # Deferred-apply queue (config.apply_lag_ms > 0): (ready_at,
+        # commit_index) pairs in commit order; entries apply only once
+        # their commit has aged past the lag. Always empty when the knob
+        # is off, so the zero-lag apply path is untouched.
+        self._apply_pending: List[Tuple[float, int]] = []
+        # Reliability signal for weighted elections (config.
+        # reliability_weighted_election): when this incarnation started
+        # (start()/restart() stamp it) and an EWMA of leader-contact
+        # regularity in [0,1] — 1.0 = every contact arrived within a few
+        # heartbeat intervals of the last. Tracked unconditionally (no RNG,
+        # no messages — schedule-neutral); only the timeout draw consults
+        # the knob.
+        self._started_at = 0.0
+        self._contact_ewma = 1.0
+
         # Candidate state.
         self.votes_received: Dict[NodeId, RequestVoteReply] = {}
         # PreVote campaign state (config.pre_vote): the prospective term we
@@ -482,6 +535,12 @@ class RaftNode:
 
     def is_voter(self) -> bool:
         return self.cluster_config.is_voter(self.id)
+
+    def is_witness(self) -> bool:
+        """Quorum-only member (ClusterConfig.witnesses): votes and acks
+        rounds, stores payload-free log skeletons, runs no state machine,
+        never campaigns, never serves reads."""
+        return self.cluster_config.is_witness(self.id)
 
     def committed_config(self) -> ClusterConfig:
         """The config as of commit_index (what a membership operation
@@ -620,9 +679,26 @@ class RaftNode:
 
     def _reset_election_timer(self, now: float) -> None:
         c = self.config
-        self.election_deadline = now + self.rng.uniform(
-            c.election_timeout_min, c.election_timeout_max
-        )
+        span = self.rng.uniform(c.election_timeout_min, c.election_timeout_max)
+        if c.reliability_weighted_election:
+            # Stretch the draw by up to reliability_election_bias spreads
+            # in proportion to current unreliability: stable nodes keep the
+            # unbiased draw and campaign first. Liveness-only — the RNG
+            # draw above is identical either way, and with the knob off the
+            # deadline is bit-identical to the seed schedule.
+            spread = c.election_timeout_max - c.election_timeout_min
+            span += spread * (1.0 - self._reliability(now)) * c.reliability_election_bias
+        self.election_deadline = now + span
+
+    def _reliability(self, now: float) -> float:
+        """Recent-uptime/contact score in [0, 1]: a linear uptime ramp
+        (time since this incarnation started, saturating at
+        reliability_uptime_ms) times the leader-contact regularity EWMA.
+        A freshly-restarted node scores ~0 regardless of its links; a
+        long-lived node on flaky links is pulled down by the EWMA."""
+        h = max(1e-9, self.config.reliability_uptime_ms)
+        up = min(1.0, max(0.0, now - self._started_at) / h)
+        return up * self._contact_ewma
 
     def _become_follower(self, term: int, now: float) -> None:
         was_leader = self.role is Role.LEADER
@@ -840,6 +916,12 @@ class RaftNode:
           votes only under lease mode (vote stickiness) — lease-free
           configs keep the seed's classic-Raft behavior.
         """
+        if self.cluster_config.is_witness(candidate):
+            # A witness is never electable: it holds no payloads, so a
+            # leadership it won could serve nothing and certify nothing.
+            # Unconditional (not recency-gated) — and like every refusal
+            # here it never bumps our term.
+            return True
         recent = self._has_recent_leader_contact(now)
         if not self.cluster_config.is_voter(candidate):
             return recent
@@ -851,6 +933,13 @@ class RaftNode:
         """Record valid-leader contact (AppendEntries / probe / snapshot
         traffic): the vote-stickiness clock restarts and any PreVote
         campaign in progress is abandoned — there IS a live leader."""
+        if self._last_leader_contact > -1.0e17:
+            # Contact-regularity EWMA for weighted elections: a gap of a
+            # few heartbeat intervals is regular, anything longer counts
+            # against this node's links. State-only (no RNG, no messages).
+            gap = now - self._last_leader_contact
+            good = 1.0 if gap <= 3.0 * self.config.heartbeat_interval else 0.0
+            self._contact_ewma = 0.8 * self._contact_ewma + 0.2 * good
         self._last_leader_contact = now
         self._prevote_term = 0
         self._prevotes = set()
@@ -895,6 +984,7 @@ class RaftNode:
     # --------------------------------------------------------------- ticks
 
     def start(self, now: float) -> None:
+        self._started_at = now
         self._reset_election_timer(now)
 
     def on_tick(self, now: float) -> Outputs:
@@ -907,6 +997,7 @@ class RaftNode:
             and not self._reads_inflight
             and not self._replica_reads
             and not self._outbox
+            and not self._apply_pending
             and self._protocol_idle()
         ):
             # Idle non-leader fast path: with the election timer unexpired
@@ -958,9 +1049,11 @@ class RaftNode:
                     if self._reads_pending:
                         out += self._send_read_probe(now)
         elif now >= self.election_deadline:
-            # Learners and removed members never campaign: they are not in
-            # any voter set, so an election they start could only disrupt.
-            if self.is_voter():
+            # Learners, removed members, and witnesses never campaign:
+            # learners/removed are in no voter set, and a witness holds no
+            # log payload, so an election it started could only disrupt
+            # (and it could never serve clients if it won).
+            if self.is_voter() and not self.is_witness():
                 if self.config.pre_vote:
                     # A timed-out CANDIDATE (split vote / lost quorum mid-
                     # election) also reverts to probing: with PreVote on, a
@@ -971,6 +1064,10 @@ class RaftNode:
                     out += self._become_candidate(now)
             else:
                 self._reset_election_timer(now)
+        # Matured apply-lag targets drain on ticks (their replies and
+        # read wakeups leave via the outbox).
+        if self._apply_pending:
+            self._drain_apply(now)
         out += self._tick_protocol(now)  # FastRaft hook (fast-slot timeouts)
         # Origin-side read retries: reads are idempotent, so lost
         # ReadQuery/ReadReply messages and leader churn are handled by
@@ -1144,7 +1241,10 @@ class RaftNode:
         outstanding — or one InstallSnapshot when the follower's next entry
         was compacted away."""
         ni = self.next_index.get(peer, self.last_log_index() + 1)
+        peer_is_witness = self.cluster_config.is_witness(peer)
         if self.snapshot is not None and ni <= self.snapshot.last_index:
+            if peer_is_witness:
+                return self._send_witness_base(peer)
             return self._send_snapshot(peer)
         out: Outputs = []
         batch = max(1, self.config.max_batch_entries)
@@ -1152,7 +1252,16 @@ class RaftNode:
         start = max(ni, self._pipe_next.get(peer, ni))
         while start <= self.last_log_index() and self._inflight.get(peer, 0) < depth:
             lo = start - self.snapshot_last_index - 1  # list position
-            if self._legacy_mode:
+            if peer_is_witness:
+                # Witnesses store log SKELETONS: the payload is elided on
+                # the wire (bandwidth is the point of the role), but the
+                # (term, entry_id) agreement data — and config/noop
+                # commands, which witnesses must act on — survive intact.
+                entries = tuple(
+                    Slot(skeleton_entry(s.entry), s.state)
+                    for s in self.log[lo : lo + batch]
+                )
+            elif self._legacy_mode:
                 entries = tuple(s.clone() for s in self.log[lo : lo + batch])
             else:
                 # Entry objects are immutable after construction, so the
@@ -1191,6 +1300,37 @@ class RaftNode:
             start += len(entries)
             self._pipe_next[peer] = start
         return out
+
+    def _send_witness_base(self, peer: NodeId) -> Outputs:
+        """Advance a witness past the compaction horizon WITHOUT shipping
+        state: a witness holds no state machine, so the compacted prefix
+        it needs is just the (last_index, last_term, config) base marker.
+        One tiny monolithic InstallSnapshot carries exactly that — never
+        the chunked stream, never the machine state or dedup filter."""
+        if self._inflight.get(peer, 0) > 0:
+            return []  # one base message in flight at a time
+        self._inflight[peer] = 1
+        self._count("witness_base_advances")
+        base = Snapshot(
+            last_index=self.snapshot.last_index,
+            last_term=self.snapshot.last_term,
+            state=None,
+            members=tuple(self.snapshot.members),
+            dedup=None,
+            config=self.snapshot.config,
+        )
+        return [
+            (
+                peer,
+                InstallSnapshotArgs(
+                    term=self.term,
+                    src=self.id,
+                    leader_id=self.id,
+                    snapshot=base,
+                    leader_commit=self.commit_index,
+                ),
+            )
+        ]
 
     def _send_snapshot(self, peer: NodeId) -> Outputs:
         """Catch a follower up past the compaction horizon: one monolithic
@@ -1310,7 +1450,11 @@ class RaftNode:
             if idx <= self.snapshot_last_index:
                 continue  # compacted == committed; nothing to reconcile
             cur = self.slot(idx)
-            if cur is not None and cur.entry.term == incoming.entry.term and cur.entry.same_entry(incoming.entry):
+            if (
+                cur is not None
+                and cur.entry.term == incoming.entry.term
+                and cur.entry.same_entry(incoming.entry)
+            ):
                 # Matching entry: possibly upgrade state (tentative->classic).
                 if cur.state is SlotState.TENTATIVE:
                     cur.state = incoming.state
@@ -1506,6 +1650,15 @@ class RaftNode:
         if read_id is None:
             read_id = EntryId(f"{self.id}/read", self.next_seq())
         if mode == "replica":
+            if self.is_witness():
+                # A witness has no state machine to serve from. Refuse
+                # immediately so the client re-targets a real replica
+                # instead of waiting out a watermark that can never serve.
+                if self.read_done_fn is not None:
+                    self.read_done_fn(
+                        read_id, {"ok": False, "error": "witness"}
+                    )
+                return []
             if read_id in self._replica_read_ids:
                 return []  # duplicate client retry
             self._replica_read_ids.add(read_id)
@@ -2054,6 +2207,14 @@ class RaftNode:
     # ---------------------------------------------------------- log & commit
 
     def _append_slot(self, s: Slot) -> None:
+        if self.is_witness():
+            # Central payload-elision choke point: every storage path
+            # (AppendEntries, fast-track slots, local leader appends if a
+            # misconfiguration ever made a witness leader) funnels through
+            # here, so a witness can never accumulate payload bytes.
+            # EntryId and term survive, keeping log matching, dedup, and
+            # the commit oracles exact.
+            s = Slot(skeleton_entry(s.entry), s.state)
         self.log.append(s)
         self._entry_index[s.entry.entry_id] = self.last_log_index()
         # Configs take effect the moment they enter the log (dissertation
@@ -2178,7 +2339,34 @@ class RaftNode:
         if new_commit <= self.commit_index:
             return
         self.commit_index = new_commit
-        while self.last_applied < self.commit_index:
+        if self.config.apply_lag_ms > 0.0:
+            # Slow-CPU apply model: the commit point advances immediately
+            # (replication is a network fact), but the state machine only
+            # catches up after this node's apply lag. Targets mature in
+            # the queue and drain from on_tick / later commit advances.
+            self._apply_pending.append((now + self.config.apply_lag_ms, new_commit))
+        self._drain_apply(now)
+
+    def _drain_apply(self, now: float) -> None:
+        """Apply committed entries up to the current apply target.
+
+        With ``apply_lag_ms == 0`` the target is always ``commit_index``
+        and this is exactly the historical inline apply loop of
+        ``_advance_commit`` (schedules stay bit-identical). With lag, the
+        target is the largest matured entry of ``_apply_pending``.
+        """
+        target = self.commit_index
+        if self._apply_pending:
+            target = self.last_applied
+            keep: List[Tuple[float, int]] = []
+            for ready_at, idx in self._apply_pending:
+                if ready_at <= now:
+                    target = max(target, idx)
+                else:
+                    keep.append((ready_at, idx))
+            self._apply_pending = keep
+            target = min(target, self.commit_index)
+        while self.last_applied < target:
             self.last_applied += 1
             s = self.slot(self.last_applied)
             self._apply(self.last_applied, s.entry, now)
@@ -2203,7 +2391,13 @@ class RaftNode:
         machine's reduced state plus the dedup filter — and drop it from the
         log. Safe at any time: only applied == committed entries are
         compacted, and followers that still need them are caught up via
-        InstallSnapshot."""
+        InstallSnapshot.
+
+        A witness compacts too — its skeleton log must stay bounded — but
+        to a payload-free base marker (``state=None``, ``dedup=None``)
+        that is never fed to the snapshot store: there is no machine
+        state to persist, only the (last_index, last_term, config) base
+        that log matching needs."""
         upto = self.last_applied
         if upto <= self.snapshot_last_index:
             return
@@ -2214,12 +2408,13 @@ class RaftNode:
             # so node memory tracks the machine's reduced state, not history.
             self._entry_index.pop(s.entry.entry_id, None)
         cfg_at = self._config_at(upto)
+        witness = self.is_witness()
         self.snapshot = Snapshot(
             last_index=upto,
             last_term=last_term,
-            state=self.state_machine.snapshot(),
+            state=None if witness else self.state_machine.snapshot(),
             members=tuple(cfg_at.members),
-            dedup=self._dedup.state(),
+            dedup=None if witness else self._dedup.state(),
             config=cfg_at,
         )
         del self.log[:keep]
@@ -2227,7 +2422,7 @@ class RaftNode:
         above = [(i, c) for i, c in self._config_log if i > upto]
         self._config_log = [(upto, cfg_at)] + above
         self._count("compactions")
-        if self.snapshot_sink is not None:
+        if self.snapshot_sink is not None and not witness:
             self.snapshot_sink(self.id, self.snapshot)
 
     def restore_snapshot(self, snap: Snapshot) -> None:
@@ -2292,8 +2487,9 @@ class RaftNode:
             if lo >= 0:
                 suffix = self.log[lo:]
         if snap.last_index > self.last_applied:
-            self.state_machine.restore(copy.deepcopy(snap.state))
-            self._dedup = DedupTable.from_state(snap.dedup)
+            if not self.is_witness():
+                self.state_machine.restore(copy.deepcopy(snap.state))
+                self._dedup = DedupTable.from_state(snap.dedup)
             self.last_applied = snap.last_index
         self.commit_index = max(self.commit_index, snap.last_index)
         self.snapshot = snap.clone()
@@ -2549,6 +2745,12 @@ class RaftNode:
         cmd = entry.command
         if is_config_command(cmd):
             self._on_config_committed(index, parse_config_command(cmd), now)
+        if self.is_witness():
+            # Witnesses track commit progress (config commits above DO
+            # matter to them) but run no state machine: the payload was
+            # elided at append time, so there is nothing true to apply,
+            # dedup, or report as this node's committed value.
+            return
         self._dedup.add(entry.entry_id)
         self.state_machine.apply(index, entry)
         if self.metrics is not None:
@@ -2644,6 +2846,7 @@ class RaftNode:
         voters: Optional[List[NodeId]] = None,
         learners: Optional[List[NodeId]] = None,
         now: float = 0.0,
+        witnesses: Optional[List[NodeId]] = None,
     ) -> Tuple[Optional[EntryId], Outputs]:
         """Leader-only entry point for a membership change. Returns
         ``(entry_id, outputs)`` of the appended config entry, or
@@ -2670,17 +2873,36 @@ class RaftNode:
                 - set(new_voters)
             )
         )
+        new_witnesses = tuple(
+            sorted(
+                (set(witnesses if witnesses is not None else cur.witnesses))
+                & set(new_voters)
+            )
+        )
         if not new_voters:
             return None, []
-        if new_voters == cur.voters and new_learners == cur.learners:
+        if set(new_voters) == set(new_witnesses):
+            return None, []  # a cluster of only witnesses can elect no one
+        if (
+            new_voters == cur.voters
+            and new_learners == cur.learners
+            and new_witnesses == cur.witnesses
+        ):
             return None, []
         if new_voters != cur.voters:
+            # Joint phase: keep the old set's witness markers alive too so
+            # a witness in C_old stays payload-free while its votes still
+            # count there.
+            joint_w = tuple(sorted(set(new_witnesses) | (set(cur.witnesses) & set(cur.voters))))
             cfg = ClusterConfig(
-                voters=new_voters, learners=new_learners, old_voters=cur.voters
+                voters=new_voters, learners=new_learners, old_voters=cur.voters,
+                witnesses=joint_w,
             )
             self._count("joint_changes_started")
         else:
-            cfg = ClusterConfig(voters=new_voters, learners=new_learners)
+            cfg = ClusterConfig(
+                voters=new_voters, learners=new_learners, witnesses=new_witnesses
+            )
             self._count("learner_changes")
         eid = EntryId(self.id, self.next_seq())
         return eid, self._append_and_replicate([(config_command(cfg), eid)], now)
@@ -2699,7 +2921,12 @@ class RaftNode:
         history, so this is the complete committed sequence exactly as in
         the seed. Reduced-state machines (KV) cannot enumerate the compacted
         prefix; only the applied-through-live-log tail is returned (use the
-        machine's own state for cross-node divergence checks)."""
+        machine's own state for cross-node divergence checks). A witness
+        can enumerate NOTHING: its log holds payload-elided skeletons, so
+        surfacing them as committed commands would only poison agreement
+        checks with ``__witness_elided__`` markers."""
+        if self.is_witness():
+            return []
         out = self.state_machine.applied_entries()
         if out is None:
             out = []
@@ -2783,6 +3010,12 @@ class RaftNode:
         self._probe_deadline = 0.0
         self._ack_dirty = True
         self._match_dirty = True
+        # Reliability tracking restarts from scratch: a freshly-restarted
+        # node has zero recent uptime, which is exactly what weighted
+        # elections should see. Pending applies died with the process.
+        self._apply_pending = []
+        self._started_at = now
+        self._contact_ewma = 1.0
         if self.snapshot is not None:
             self.state_machine.restore(copy.deepcopy(self.snapshot.state))
             self._dedup = DedupTable.from_state(self.snapshot.dedup)

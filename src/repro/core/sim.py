@@ -143,6 +143,44 @@ class Adversary:
         return [msg]
 
 
+@dataclasses.dataclass
+class FailureProfile:
+    """Per-node unreliability model for heterogeneous ("flaky") fleets.
+
+    Crash/recover behavior is a renewal process: a node stays up for
+    Exp(mean=``mtbf_ms``) then down for Exp(mean=``mttr_ms``), repeating
+    while the profile is installed (``mtbf_ms == 0`` never crashes).
+    ``apply_lag_ms`` models a slow CPU: commit acknowledgement is
+    unaffected (replication is a network fact) but the node's state
+    machine trails its commit point by the lag (RaftConfig.apply_lag_ms).
+    The four multipliers compose per DIRECTED link — src's outbound times
+    dst's inbound — so asymmetric paths (fine uplink, terrible downlink)
+    are expressible; they scale the base LinkModel, so a lossless network
+    stays lossless (multiplier semantics, not additive).
+
+    ``group`` names a correlated-failure domain (rack, AZ, spot pool):
+    :meth:`Cluster.crash_group` fells a whole group at once, and the
+    hierarchy placement policy (repro.core.hierarchy.rebalance_coflaky)
+    avoids concentrating any quorum inside one group.
+
+    Determinism contract: each node's crash/recover schedule is drawn
+    from a DEDICATED per-node RNG stream keyed by (cluster seed, node
+    id) — never ``sim.rng`` — so the failure schedule is identical
+    across protocol variants run on the same seed. That is what makes
+    "weighted vs unweighted elections under the same failure schedule"
+    a controlled comparison (benchmarks/unreliable_scaleout.py).
+    """
+
+    mtbf_ms: float = 0.0       # mean up-time between crashes (0 = stable)
+    mttr_ms: float = 1000.0    # mean down-time per crash
+    apply_lag_ms: float = 0.0  # state-machine lag behind commit
+    loss_mult: float = 1.0     # outbound loss multiplier
+    latency_mult: float = 1.0  # outbound latency multiplier
+    in_loss_mult: float = 1.0  # inbound loss multiplier
+    in_latency_mult: float = 1.0  # inbound latency multiplier
+    group: str = ""            # correlated-failure domain
+
+
 # Rough fixed per-message framing cost (headers, term/id fields) for the
 # size-aware network model; only relative sizes matter.
 _MSG_BASE_BYTES = 64
@@ -423,6 +461,7 @@ class Cluster:
         engine: str = "slotted",
         link_rng: str = "shared",
         link_rng_backend: str = "auto",
+        witnesses: Sequence[NodeId] = (),
     ):
         if engine not in ("slotted", "legacy"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -472,15 +511,31 @@ class Cluster:
         # Optional message-level fault injector (fuzzer hook); None =
         # transparent transport, exactly the seed behavior.
         self.adversary: Optional[Adversary] = None
+        # Per-node failure profiles (empty dict = perfectly reliable fleet,
+        # exactly the seed behavior). Installed via set_failure_profiles;
+        # _fp_gen invalidates scheduled crash/recover events on clear.
+        self.failure_profiles: Dict[NodeId, FailureProfile] = {}
+        self._fp_gen = 0
+        self._fp_rngs: Dict[NodeId, random.Random] = {}
         # Membership operation queue (serialized; see MembershipOp).
         self._mops: List[MembershipOp] = []
         self._mop_poll_scheduled = False
         self.membership_failures: List[MembershipOp] = []
 
         ids = [f"{node_prefix}{i}" for i in range(n)]
+        # Witness members (quorum-only voters, see ClusterConfig): named
+        # founding nodes join with the marker set from slot one. Empty
+        # tuple (the default) builds the seed-identical all-voter config.
+        wits = tuple(sorted(set(witnesses)))
+        bad = set(wits) - set(ids)
+        if bad:
+            raise ValueError(f"witnesses not in cluster: {sorted(bad)}")
+        init_cfg = ClusterConfig.of(ids, witnesses=wits) if wits else None
         self.nodes: Dict[NodeId, RaftNode] = {}
         for i, nid in enumerate(ids):
-            self.nodes[nid] = self._make_node(nid, ids, seed * 1000 + i)
+            self.nodes[nid] = self._make_node(
+                nid, ids, seed * 1000 + i, cluster_config=init_cfg
+            )
         for node in self.nodes.values():
             node.start(self.sim.now)
             self._schedule_tick(node.id)
@@ -568,22 +623,42 @@ class Cluster:
         link = self._link_for(src, dst)
         size_aware = link.bytes_per_ms > 0 or link.mtu_bytes > 0
         size = wire_size(msg) if size_aware else 0
+        # Failure-profile link multipliers compose per DIRECTED link:
+        # src's outbound times dst's inbound. Multiplicative, so a
+        # lossless base network stays lossless and the RNG draw gating
+        # below (no draw when link.loss == 0) — and therefore the
+        # schedule — is untouched by installing all-1.0 profiles.
+        loss_mult = lat_mult = 1.0
+        if self.failure_profiles:
+            fs = self.failure_profiles.get(src)
+            fd = self.failure_profiles.get(dst)
+            if fs is not None:
+                loss_mult *= fs.loss_mult
+                lat_mult *= fs.latency_mult
+            if fd is not None:
+                loss_mult *= fd.in_loss_mult
+                lat_mult *= fd.in_latency_mult
         vr = self._vec_rng
         if vr is None:
-            if link.loss > 0 and self.sim.rng.random() < link.drop_probability(size):
+            if link.loss > 0 and self.sim.rng.random() < min(
+                1.0, link.drop_probability(size) * loss_mult
+            ):
                 self.metrics.count("dropped")
                 return
-            delay = link.sample_latency(self.sim.rng)
+            delay = link.sample_latency(self.sim.rng) * lat_mult
         else:
             # Vectorized mode: same gating as the scalar path (a lossless
             # link consumes no loss draw, a jitter-free link no jitter
             # draw), uniforms pulled from the (src, dst) block stream.
-            if link.loss > 0 and vr.next(src, dst) < link.drop_probability(size):
+            if link.loss > 0 and vr.next(src, dst) < min(
+                1.0, link.drop_probability(size) * loss_mult
+            ):
                 self.metrics.count("dropped")
                 return
-            delay = link.base_latency + (
-                link.jitter * vr.next(src, dst) if link.jitter else 0.0
-            )
+            delay = (
+                link.base_latency
+                + (link.jitter * vr.next(src, dst) if link.jitter else 0.0)
+            ) * lat_mult
         overhead = link.serialization_cost(size)
         if overhead > 0:
             # Per-RPC serialization (+ size-proportional transmission when
@@ -689,13 +764,20 @@ class Cluster:
             "error": None,
             "attempts": [via],
         }
-        if not node.alive and retry_ms is None:
+        # A witness has no state machine: a replica read targeted at one
+        # can never be served there. Fail fast (like a crashed host) or,
+        # with retries on, leave it to the failover loop — which also
+        # skips witness hosts when cycling.
+        unservable = mode == "replica" and node.is_witness()
+        if (not node.alive or unservable) and retry_ms is None:
             rec = self.reads[rid]
             rec["ok"] = False
-            rec["error"] = f"host down: {via}"
+            rec["error"] = (
+                f"witness host: {via}" if unservable else f"host down: {via}"
+            )
             rec["completed_at"] = self.sim.now
             return rid
-        if node.alive:
+        if node.alive and not unservable:
             self.dispatch(
                 via,
                 node.client_read(
@@ -731,9 +813,12 @@ class Cluster:
             target = None
             for i in range(len(hosts)):
                 cand = hosts[(start + i) % len(hosts)]
-                if self.nodes[cand].alive:
-                    target = cand
-                    break
+                if not self.nodes[cand].alive:
+                    continue
+                if rec["mode"] == "replica" and self.nodes[cand].is_witness():
+                    continue  # no state machine to serve from
+                target = cand
+                break
             if target is not None:
                 rec["attempts"].append(target)
                 self.metrics.count("read_client_failovers")
@@ -885,6 +970,101 @@ class Cluster:
         (e.g. mid-partition, before a follower can catch up classically)."""
         self.nodes[nid].compact()
 
+    # ------------------------------------------------- failure profiles
+
+    def set_failure_profiles(
+        self, profiles: Dict[NodeId, FailureProfile]
+    ) -> None:
+        """Install per-node :class:`FailureProfile`\\ s (replacing any
+        already installed). Crash/recover renewal processes start
+        immediately; apply lag takes effect on the node's next commit;
+        link multipliers on the next message sent.
+
+        Each node's schedule comes from a dedicated RNG stream keyed by
+        (cluster seed, node id), drawn in a fixed order (up-time, then
+        down-time, repeating) — so two experiments on the same seed see
+        the SAME failure schedule regardless of which protocol variant,
+        engine, or election policy is under test."""
+        self.clear_failure_profiles()
+        self.failure_profiles = dict(profiles)
+        gen = self._fp_gen
+        for nid in sorted(profiles):
+            fp = profiles[nid]
+            node = self.nodes.get(nid)
+            if node is not None and fp.apply_lag_ms > 0:
+                node.config.apply_lag_ms = fp.apply_lag_ms
+            if fp.mtbf_ms > 0:
+                r = random.Random(
+                    zlib.crc32(f"failure:{nid}".encode())
+                    ^ (self.seed * 2654435761 + 101) % 2**31
+                )
+                self._fp_rngs[nid] = r
+                self._fp_schedule(nid, gen, r.expovariate(1.0 / fp.mtbf_ms), True)
+
+    def clear_failure_profiles(self) -> None:
+        """Lift all failure profiles: pending crash/recover events are
+        invalidated (generation check at fire time), apply lag returns to
+        zero, link multipliers stop applying. Nodes currently down stay
+        down — recovery policy belongs to the caller (see fuzzer
+        ``recover()``)."""
+        self._fp_gen += 1
+        self._fp_rngs = {}
+        for nid in self.failure_profiles:
+            node = self.nodes.get(nid)
+            if node is not None:
+                node.config.apply_lag_ms = 0.0
+        self.failure_profiles = {}
+
+    def _fp_schedule(
+        self, nid: NodeId, gen: int, delay: float, crash: bool
+    ) -> None:
+        """Self-rescheduling crash/recover event for one profiled node.
+        Fires through the engine's closure channel; a stale generation
+        (profiles cleared/replaced) or a popped node ends the chain."""
+
+        def fire() -> None:
+            if gen != self._fp_gen:
+                return
+            fp = self.failure_profiles.get(nid)
+            node = self.nodes.get(nid)
+            if fp is None or node is None:
+                return
+            r = self._fp_rngs[nid]
+            if crash:
+                if node.alive:
+                    node.crash()
+                    self.metrics.count("fp_crashes")
+                self._fp_schedule(
+                    nid, gen, r.expovariate(1.0 / max(1e-9, fp.mttr_ms)), False
+                )
+            else:
+                # restart(), not restart_from_store(): a flaky node loses
+                # its process, not its disk (volatile state resets, log
+                # and hard state survive — exactly RaftNode.restart).
+                if not node.alive:
+                    self.nodes[nid].restart(self.sim.now)
+                    self.metrics.count("fp_recoveries")
+                self._fp_schedule(
+                    nid, gen, r.expovariate(1.0 / fp.mtbf_ms), True
+                )
+
+        self.sim.schedule(delay, fire)
+
+    def crash_group(self, group: str) -> List[NodeId]:
+        """Correlated failure: crash every live node whose installed
+        profile names this ``group`` (rack loss, AZ outage, spot-pool
+        reclaim). Returns the nodes felled."""
+        felled = []
+        for nid in sorted(self.failure_profiles):
+            if self.failure_profiles[nid].group == group:
+                node = self.nodes.get(nid)
+                if node is not None and node.alive:
+                    node.crash()
+                    felled.append(nid)
+        if felled:
+            self.metrics.count("fp_group_crashes")
+        return felled
+
     def partition(self, *groups: Sequence[NodeId]) -> None:
         """Block all links that cross group boundaries."""
         self.heal()
@@ -1012,6 +1192,20 @@ class Cluster:
             MembershipOp("promote", nid, deadline=self.sim.now + timeout)
         )
 
+    def add_witness(
+        self, nid: NodeId, seed: Optional[int] = None, timeout: float = 60_000.0
+    ) -> List[MembershipOp]:
+        """Add ``nid`` as a WITNESS voter (quorum-only member: votes and
+        acks rounds, stores log skeletons, never campaigns, never serves
+        reads) — the cheap way to odd-size a cluster. Joins as a learner
+        first, then one joint change promotes it straight into the voter
+        set with the witness marker."""
+        op1 = self.add_learner(nid, seed=seed, timeout=timeout)
+        op2 = self._enqueue_mop(
+            MembershipOp("witness", nid, deadline=self.sim.now + timeout)
+        )
+        return [op1, op2]
+
     def remove_node(
         self, nid: NodeId, pop: bool = False, timeout: float = 60_000.0
     ) -> MembershipOp:
@@ -1112,6 +1306,12 @@ class Cluster:
             and op.nid in committed.voters
         ):
             return True
+        if (
+            op.kind == "witness"
+            and not in_transition
+            and op.nid in committed.witnesses
+        ):
+            return True
         if op.kind in ("remove", "swap"):
             gone = not in_transition and op.nid not in committed.members
             swapped = op.kind == "remove" or op.new in committed.voters
@@ -1136,6 +1336,16 @@ class Cluster:
                 return False
             eid, out = lead.propose_config_change(
                 voters=sorted(set(cur.voters) | {op.nid}), now=self.sim.now
+            )
+        elif op.kind == "witness":
+            # A witness only acks rounds it has the skeleton for, so the
+            # same catch-up gate as a real promotion applies.
+            if op.nid not in cur.members or not self._learner_caught_up(lead, op.nid):
+                return False
+            eid, out = lead.propose_config_change(
+                voters=sorted(set(cur.voters) | {op.nid}),
+                witnesses=sorted(set(cur.witnesses) | {op.nid}),
+                now=self.sim.now,
             )
         elif op.kind == "remove":
             eid, out = lead.propose_config_change(

@@ -68,6 +68,16 @@ class ClusterConfig:
       simple (final) config. The joint config is itself a log entry; once
       it commits, the leader appends the final C_new config, and only when
       THAT commits is the transition done.
+    - ``witnesses`` marks a subset of the voters as **quorum-only
+      members** (BlackWater-style): they vote in elections, ack
+      replication rounds, and count toward every quorum predicate, but
+      store only log *positions* (term/index/entry-id skeletons, no
+      command payloads), run no state machine, never campaign, and never
+      serve reads. The marker survives joint transitions — a witness in
+      C_old stays a witness in C_old,new and C_new unless removed. Safety
+      rests on the acked-log floor (DESIGN.md §12): a witness is
+      permanently in the "restored node that lost its log" state that §10
+      already makes safe.
 
     A config takes effect the moment it is appended to a node's log (not
     when it commits) and rolls back if the entry is truncated — the
@@ -81,6 +91,7 @@ class ClusterConfig:
     voters: Tuple[NodeId, ...]
     learners: Tuple[NodeId, ...] = ()
     old_voters: Optional[Tuple[NodeId, ...]] = None
+    witnesses: Tuple[NodeId, ...] = ()
     # Lazily computed members cache; must be a declared field now that the
     # class is slotted (object.__setattr__ needs a slot to land in).
     _members_cache: Optional[Tuple[NodeId, ...]] = dataclasses.field(
@@ -92,12 +103,18 @@ class ClusterConfig:
         voters: Iterable[NodeId],
         learners: Iterable[NodeId] = (),
         old_voters: Optional[Iterable[NodeId]] = None,
+        witnesses: Iterable[NodeId] = (),
     ) -> "ClusterConfig":
         v = tuple(sorted(set(voters)))
+        ov = None if old_voters is None else tuple(sorted(set(old_voters)))
+        # The marker only means something for ids that vote in some
+        # active set; canonicalize so equality is structural.
+        voting = set(v) | (set(ov) if ov is not None else set())
         return ClusterConfig(
             voters=v,
             learners=tuple(sorted(set(learners) - set(v))),
-            old_voters=None if old_voters is None else tuple(sorted(set(old_voters))),
+            old_voters=ov,
+            witnesses=tuple(sorted(set(witnesses) & voting)),
         )
 
     @property
@@ -132,6 +149,11 @@ class ClusterConfig:
     def is_learner(self, nid: NodeId) -> bool:
         return nid in self.learners and not self.is_voter(nid)
 
+    def is_witness(self, nid: NodeId) -> bool:
+        """Quorum-only voter: counts toward every quorum but stores no
+        command payloads, never campaigns, never serves reads."""
+        return nid in self.witnesses and self.is_voter(nid)
+
     def election_won(self, granted: Set[NodeId]) -> bool:
         """True iff ``granted`` contains a majority of EVERY active voter
         set (both halves of a joint config must elect)."""
@@ -162,7 +184,7 @@ class ClusterConfig:
 
     def final(self) -> "ClusterConfig":
         """The simple config that ends this joint transition."""
-        return ClusterConfig.of(self.voters, self.learners)
+        return ClusterConfig.of(self.voters, self.learners, witnesses=self.witnesses)
 
     def to_wire(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -171,6 +193,8 @@ class ClusterConfig:
         }
         if self.old_voters is not None:
             d["old_voters"] = list(self.old_voters)
+        if self.witnesses:
+            d["witnesses"] = list(self.witnesses)
         return d
 
     @staticmethod
@@ -179,6 +203,7 @@ class ClusterConfig:
             d.get("voters", ()),
             d.get("learners", ()),
             d.get("old_voters"),
+            d.get("witnesses", ()),
         )
 
 

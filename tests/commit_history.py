@@ -68,8 +68,13 @@ def check_commit_history(
     # most-applied node's dedup oracle — exact across compaction. (For the
     # default LogListMachine the enumerated history already covers
     # everything, so this is a no-op.)
+    # Witnesses are excluded: their last_applied tracks commit progress
+    # but their dedup filter and machine stay empty by design, so one
+    # would answer has_applied() falsely negative.
     most_applied = max(
-        cluster.nodes.values(), key=lambda n: n.last_applied, default=None
+        (n for n in cluster.nodes.values() if not n.is_witness()),
+        key=lambda n: n.last_applied,
+        default=None,
     )
     for eid in acked:
         t = cluster.metrics.traces.get(eid)
@@ -98,6 +103,8 @@ def check_kv_consistency(cluster) -> None:
     canonical state encoding)."""
     by_applied = {}
     for nid, node in cluster.nodes.items():
+        if node.is_witness():
+            continue  # no state machine: nothing to diverge
         by_applied.setdefault(node.last_applied, []).append(nid)
     for applied, nids in sorted(by_applied.items()):
         ref = cluster.nodes[nids[0]].state_machine.snapshot()
@@ -112,7 +119,11 @@ def check_kv_consistency(cluster) -> None:
 def check_kv_converged(cluster) -> None:
     """Strict end-of-run form: every live node applied the same prefix and
     holds the same final KV map. Call after healing + settling."""
-    applied = {nid: n.last_applied for nid, n in cluster.nodes.items() if n.alive}
+    applied = {
+        nid: n.last_applied
+        for nid, n in cluster.nodes.items()
+        if n.alive and not n.is_witness()
+    }
     assert len(set(applied.values())) == 1, f"nodes not converged: {applied}"
     check_kv_consistency(cluster)
 

@@ -1,0 +1,367 @@
+"""Reliability-aware scale-out: failure profiles, weighted elections,
+apply lag, link multipliers, and co-flaky-aware placement.
+
+The contract under test throughout: every new knob defaults OFF and the
+failure schedule is a pure function of (cluster seed, node id) — the SAME
+crash/recover times replay no matter which protocol variant runs on top,
+so A/B comparisons (weighted vs unweighted elections, witness vs full)
+are schedule-for-schedule, never statistical.
+"""
+
+import pytest
+
+from repro.core.hierarchy import (
+    HierarchicalCluster,
+    coflaky_risk,
+    plan_coflaky_moves,
+)
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster, FailureProfile
+from repro.core.statemachine import KVMachine
+
+from commit_history import (
+    check_commit_history,
+    check_kv_consistency,
+    committed_acks,
+)
+
+
+def kv_factory(nid):
+    return KVMachine()
+
+
+# ------------------------------------------------------- failure schedules
+
+
+def _crashy(n, mtbf=3000.0):
+    return {
+        f"n{i}": FailureProfile(mtbf_ms=mtbf, mttr_ms=500.0, group=f"g{i % 2}")
+        for i in range(n)
+    }
+
+
+def test_failure_schedule_is_deterministic_across_variants():
+    """Same seed, same profiles, different protocol stack on top — the
+    chaos (crash and recovery counts) must be identical, because the
+    schedule draws from per-node RNG streams the protocol never touches."""
+    counts = []
+    for protocol, weighted in (("raft", False), ("fastraft", False),
+                               ("fastraft", True)):
+        cfg = RaftConfig(reliability_weighted_election=weighted)
+        c = Cluster(n=5, protocol=protocol, seed=301, config=cfg)
+        assert c.run_until_leader() is not None
+        c.set_failure_profiles(_crashy(5))
+        c.run(20_000)
+        counts.append(
+            (
+                c.metrics.counters.get("fp_crashes", 0),
+                c.metrics.counters.get("fp_recoveries", 0),
+            )
+        )
+    assert counts[0] == counts[1] == counts[2]
+    assert counts[0][0] > 0, "chaos never fired"
+
+
+def test_neutral_profiles_preserve_schedule_exactly():
+    """Profiles with no failures and x1.0 multipliers must be bit-identical
+    to no profiles at all: same commits, same message counts, same sim."""
+
+    def run(with_profiles):
+        c = Cluster(n=3, protocol="fastraft", seed=302, loss=0.05, jitter=2.0)
+        lead = c.run_until_leader()
+        if with_profiles:
+            c.set_failure_profiles(
+                {f"n{i}": FailureProfile() for i in range(3)}
+            )
+        eids = [c.submit(f"x{i}", via=lead) for i in range(10)]
+        c.run(5000)
+        committed = [
+            (e, c.metrics.traces[e].first_commit_at)
+            for e in eids
+            if c.metrics.traces[e].committed
+        ]
+        return committed, dict(c.metrics.counters), c.sim.now
+
+    assert run(False) == run(True)
+
+
+def test_clear_failure_profiles_stops_the_chaos():
+    c = Cluster(n=3, protocol="raft", seed=303)
+    assert c.run_until_leader() is not None
+    c.set_failure_profiles(_crashy(3, mtbf=1500.0))
+    c.run(10_000)
+    assert c.metrics.counters.get("fp_crashes", 0) > 0
+    c.clear_failure_profiles()
+    for nid in list(c.nodes):
+        if not c.nodes[nid].alive:
+            c.nodes[nid].restart(c.sim.now)
+    before = c.metrics.counters.get("fp_crashes", 0)
+    c.run(15_000)
+    assert c.metrics.counters.get("fp_crashes", 0) == before
+    assert all(n.alive for n in c.nodes.values())
+
+
+def test_commits_survive_crash_recover_chaos():
+    c = Cluster(n=5, protocol="fastraft", seed=304,
+                state_machine_factory=kv_factory)
+    assert c.run_until_leader() is not None
+    c.set_failure_profiles(_crashy(5, mtbf=4000.0))
+    eids = []
+    for i in range(40):
+        alive = [n for n in sorted(c.nodes) if c.nodes[n].alive]
+        if alive:
+            eids.append(c.submit(f"SET c{i} {i}", via=alive[0]))
+        c.run(100)
+    c.clear_failure_profiles()
+    c.heal()
+    for nid in list(c.nodes):
+        if not c.nodes[nid].alive:
+            c.nodes[nid].restart(c.sim.now)
+    assert c.run_until_leader(60_000) is not None
+    c.run(5000)
+    check_commit_history(c, acked=committed_acks(c, eids))
+    check_kv_consistency(c)
+
+
+def test_crash_group_fells_correlated_nodes():
+    c = Cluster(n=5, protocol="raft", seed=305)
+    assert c.run_until_leader() is not None
+    c.set_failure_profiles(_crashy(5, mtbf=0.0))  # groups only, no renewal
+    felled = c.crash_group("g0")  # n0, n2, n4
+    assert felled == ["n0", "n2", "n4"]
+    assert all(not c.nodes[n].alive for n in felled)
+    # g1 = {n1, n3} is a minority: nothing can commit until recovery.
+    c.run(5000)
+    survivor = [n for n in sorted(c.nodes) if c.nodes[n].alive][0]
+    eid = c.submit("stalled", via=survivor)
+    assert not c.run_until_committed([eid], 5000)
+    for nid in felled:
+        c.nodes[nid].restart(c.sim.now)
+    assert c.run_until_leader(60_000) is not None
+    assert c.run_until_committed([eid], 30_000)
+
+
+# ------------------------------------------------------------- apply lag
+
+
+def test_apply_lag_defers_state_machine_not_commit():
+    cfg = RaftConfig(apply_lag_ms=5000.0)
+    c = Cluster(n=3, protocol="raft", seed=306, config=cfg,
+                state_machine_factory=kv_factory)
+    lead = c.run_until_leader()
+    eids = [c.submit(f"SET a{i} {i}", via=lead) for i in range(3)]
+    c.run(1500)  # plenty for the commit round, far less than the lag
+    node = c.nodes[lead]
+    assert node.commit_index >= 3  # consensus reached...
+    assert node.last_applied == 0  # ...but the state machine lags behind
+    c.run(6000)  # > apply_lag_ms: the deferred queue drains on ticks
+    assert c.nodes[lead].last_applied >= 3
+    assert c.run_until_committed(eids)
+    check_kv_consistency(c)
+
+
+def test_apply_lag_via_failure_profile_install():
+    c = Cluster(n=3, protocol="raft", seed=307)
+    lead = c.run_until_leader()
+    c.set_failure_profiles({"n1": FailureProfile(apply_lag_ms=600.0)})
+    assert c.nodes["n1"].config.apply_lag_ms == 600.0
+    eids = [c.submit(f"y{i}", via=lead) for i in range(3)]
+    assert c.run_until_committed(eids)
+    c.run(2000)
+    assert c.nodes["n1"].last_applied >= 3  # slow, but it gets there
+    c.clear_failure_profiles()
+    assert c.nodes["n1"].config.apply_lag_ms == 0.0
+
+
+# ------------------------------------------------------- link multipliers
+
+
+def test_asymmetric_latency_multiplier_slows_only_the_flaky_node():
+    """A 20x inbound/outbound latency multiplier on one follower delays
+    ITS replication but not the cluster's commits (quorum = the two fast
+    members); the laggard's match index trails."""
+    base = Cluster(n=3, protocol="raft", seed=308, base_latency=5.0)
+    lead = base.run_until_leader()
+    base.set_failure_profiles(
+        {"n2" if lead != "n2" else "n1": FailureProfile(
+            latency_mult=20.0, in_latency_mult=20.0)}
+    )
+    slow = "n2" if lead != "n2" else "n1"
+    eids = [base.submit(f"z{i}", via=lead) for i in range(5)]
+    assert base.run_until_committed(eids, 10_000)
+    # Commit landed on the fast quorum while the slowed node still waits
+    # for its 100ms-per-hop deliveries.
+    assert base.nodes[slow].commit_index < base.nodes[lead].commit_index
+    base.run(2000)
+    assert base.nodes[slow].commit_index >= base.nodes[lead].commit_index - 1
+
+
+def test_loss_multiplier_composes_with_link_loss():
+    """loss_mult scales the link's own loss probability: a lossless link
+    stays lossless (0 * k = 0), so neutral profiles cannot add drops."""
+    c = Cluster(n=3, protocol="raft", seed=309, loss=0.0)
+    lead = c.run_until_leader()
+    c.set_failure_profiles(
+        {n: FailureProfile(loss_mult=50.0, in_loss_mult=50.0) for n in c.nodes}
+    )
+    eids = [c.submit(f"l{i}", via=lead) for i in range(5)]
+    assert c.run_until_committed(eids, 10_000)
+    assert c.metrics.counters.get("dropped", 0) == 0
+
+
+# ------------------------------------------------- weighted leader election
+
+
+def test_weighted_election_prefers_reliable_nodes():
+    """Aggregated over seeds, reliability-weighted elections produce no
+    MORE leadership churn than unweighted under identical heterogeneous
+    failure schedules (the flaky half crashes 8x more often)."""
+    totals = {False: 0, True: 0}
+    for weighted in (False, True):
+        for seed in range(310, 330):
+            cfg = RaftConfig(
+                pre_vote=True, check_quorum=True,
+                reliability_weighted_election=weighted,
+            )
+            c = Cluster(n=5, protocol="raft", seed=seed, config=cfg)
+            assert c.run_until_leader() is not None
+            profiles = {
+                f"n{i}": FailureProfile(
+                    mtbf_ms=1600.0 if i >= 2 else 12_800.0, mttr_ms=800.0
+                )
+                for i in range(5)
+            }
+            c.set_failure_profiles(profiles)
+            c.run(25_000)
+            totals[weighted] += c.metrics.counters.get("leader_elected", 0)
+    assert totals[True] <= totals[False], totals
+    assert totals[False] > 0
+
+
+def test_weighted_election_off_is_bit_identical_to_baseline():
+    """The knob defaults off and must not perturb schedules when off:
+    the extra bias code only runs after the same rng.uniform draw."""
+
+    def run(explicit_off):
+        cfg = RaftConfig(reliability_weighted_election=False) if explicit_off \
+            else RaftConfig()
+        c = Cluster(n=3, protocol="fastraft", seed=315, loss=0.02, config=cfg)
+        lead = c.run_until_leader()
+        eids = [c.submit(f"w{i}", via=lead) for i in range(5)]
+        c.run(4000)
+        return dict(c.metrics.counters), c.sim.now, c.leader()
+
+    assert run(False) == run(True)
+
+
+# ---------------------------------------------- co-flaky-aware placement
+
+
+def test_coflaky_risk_scores_concentration():
+    placement = {"pod0": ["a", "b", "c"], "pod1": ["d", "e", "f"]}
+    groups = {"a": "rack1", "b": "rack1", "c": "rack2", "d": "rack3"}
+    risk = coflaky_risk(placement, groups)
+    assert risk["pod0"] == pytest.approx(2 / 3)  # rack1 holds pod0's majority
+    assert risk["pod1"] == pytest.approx(1 / 3)
+    # Ungrouped hosts contribute no correlated risk.
+    assert coflaky_risk({"p": ["x", "y"]}, {})["p"] == 0.0
+
+
+def _apply_plan(placement, plan):
+    place = {p: list(hs) for p, hs in placement.items()}
+    for host, src, dst in plan:
+        assert host in place[src], (host, src, place)
+        place[src].remove(host)
+        place[dst].append(host)
+    return place
+
+
+def _worst_group_majority(place, groups):
+    worst = False
+    for hosts in place.values():
+        counts = {}
+        for h in hosts:
+            g = groups.get(h, "")
+            if g:
+                counts[g] = counts.get(g, 0) + 1
+        if max(counts.values(), default=0) >= len(hosts) // 2 + 1:
+            worst = True
+    return worst
+
+
+def test_plan_coflaky_moves_fully_decorrelates_when_feasible():
+    """Three rack1 hosts over THREE pods: swaps can spread them one per
+    pod, leaving no pod whose quorum dies with a single rack."""
+    placement = {
+        "pod0": ["a", "b", "c"],   # rack1 x3: one outage = quorum loss
+        "pod1": ["d", "e", "f"],
+        "pod2": ["g", "h", "i"],
+    }
+    groups = {"a": "rack1", "b": "rack1", "c": "rack1",
+              "d": "rack2", "e": "rack3", "f": "rack4",
+              "g": "rack5", "h": "rack6", "i": "rack7"}
+    plan = plan_coflaky_moves(placement, groups)
+    assert plan, "planner ignored a quorum-in-one-rack pod"
+    assert len(plan) % 2 == 0, "swap-based plan must pair its moves"
+    place = _apply_plan(placement, plan)
+    # Swaps preserve pod sizes: nobody shrank below quorum-able size.
+    assert all(len(hs) == 3 for hs in place.values())
+    assert not _worst_group_majority(place, groups)
+    assert max(coflaky_risk(place, groups).values()) < 1.0
+
+
+def test_plan_coflaky_moves_best_effort_when_infeasible():
+    """Three rack1 hosts over TWO 3-host pods: some pod must keep two of
+    them, so the planner reduces the worst risk and stops — it must not
+    thrash or empty a pod chasing the unreachable layout."""
+    placement = {"pod0": ["a", "b", "c"], "pod1": ["d", "e", "f"]}
+    groups = {"a": "rack1", "b": "rack1", "c": "rack1",
+              "d": "rack2", "e": "rack3", "f": "rack4"}
+    plan = plan_coflaky_moves(placement, groups)
+    assert plan
+    place = _apply_plan(placement, plan)
+    assert all(len(hs) == 3 for hs in place.values())
+    before = coflaky_risk(placement, groups)
+    after = coflaky_risk(place, groups)
+    assert max(after.values()) < max(before.values())
+
+
+def test_plan_coflaky_moves_noop_when_spread():
+    placement = {"pod0": ["a", "b", "c"]}
+    groups = {"a": "r1", "b": "r2", "c": "r3"}
+    assert plan_coflaky_moves(placement, groups) == []
+
+
+def test_hierarchy_rebalance_coflaky_live():
+    """End-to-end: install group-concentrated profiles, rebalance, and the
+    executed pod swaps eliminate every quorum-in-one-group pod."""
+    h = HierarchicalCluster(n_pods=3, hosts_per_pod=3, seed=316,
+                            state_machine_factory=kv_factory)
+    h.bootstrap()
+    # pod0's three hosts all share one failure group; the rest are spread.
+    p0 = h.pod_ids[0]
+    profiles = {}
+    for nid in h.placement()[p0]:
+        profiles[nid] = FailureProfile(group="rackA")
+    for pod in h.pod_ids[1:]:
+        for i, nid in enumerate(h.placement()[pod]):
+            profiles[nid] = FailureProfile(group=f"{pod}rack{i}")
+    h.set_failure_profiles(profiles)
+    before = coflaky_risk(h.placement(), h.failure_groups())
+    assert before[p0] == 1.0
+    moves = h.rebalance_coflaky()
+    assert moves, "no rebalancing issued"
+    assert h.run_until_moved(600_000), "pod moves did not complete"
+    groups = h.failure_groups()
+    place = h.placement()
+    assert all(len(hs) == 3 for hs in place.values())  # swaps kept sizes
+    assert not _worst_group_majority(place, groups)
+    assert max(coflaky_risk(place, groups).values()) < 1.0
+    # The reshuffled pods still elect and serve.
+    for pod in h.pod_ids:
+        assert (h.pods[pod].leader() is not None
+                or h.pods[pod].run_until_leader(60_000))
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

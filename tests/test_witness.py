@@ -1,0 +1,242 @@
+"""Witness (quorum-only member) edge cases.
+
+A witness lives INSIDE the voter set with a marker
+(`ClusterConfig.witnesses`): it votes in elections, acks replication
+rounds and fast-track slots, but stores only log *skeletons* (entry id +
+term, payload elided), runs no state machine, never campaigns, and never
+serves reads. These tests pin the edges: joint-config transitions,
+election non-participation, fast-quorum counting, snapshot-stream
+elision, and the commit path when the quorum leans on witness acks.
+"""
+
+import pytest
+
+from repro.core.raft import WITNESS_ELIDED, RaftConfig, skeleton_entry
+from repro.core.sim import Cluster
+from repro.core.statemachine import KVMachine
+from repro.core.types import ClusterConfig, Entry, EntryId, Role, fast_quorum
+
+from commit_history import (
+    check_commit_history,
+    check_config_oracle,
+    check_kv_consistency,
+    committed_acks,
+)
+
+
+def kv_factory(nid):
+    return KVMachine()
+
+
+# ------------------------------------------------------------ config model
+
+
+def test_cluster_config_witness_marker_and_quorums():
+    cfg = ClusterConfig.of(("a", "b", "c", "d", "e"), witnesses=("d", "e"))
+    assert cfg.is_witness("d") and cfg.is_witness("e")
+    assert not cfg.is_witness("a")
+    # Witnesses are real voters: majority quorum counts them.
+    assert cfg.election_won({"a", "d", "e"})
+    assert not cfg.election_won({"a", "b"})
+    # Fast quorum ceil(3V/4) = 4 of 5 counts witness votes too.
+    assert fast_quorum(5) == 4
+    assert cfg.fast_ok({"a", "b", "d", "e"})
+    assert not cfg.fast_ok({"a", "b", "d"})
+    # The marker survives canonicalization but only for actual voters.
+    cfg2 = ClusterConfig.of(("a", "b", "c"), witnesses=("c", "zzz"))
+    assert cfg2.witnesses == ("c",)
+
+
+def test_skeleton_entry_preserves_identity_elides_payload():
+    e = Entry(3, "put k=v", EntryId("n0", 7), 100.0)
+    s = skeleton_entry(e)
+    assert s.command == WITNESS_ELIDED
+    assert s.same_entry(e) and s.term == e.term
+    # Config and noop entries pass through un-elided: witnesses must be
+    # able to act on membership changes and barriers.
+    cfg_e = Entry(3, "__config__:whatever", EntryId("n0", 8), 100.0)
+    assert skeleton_entry(cfg_e).command == cfg_e.command
+    # Idempotent: re-eliding an already-elided entry is a no-op.
+    assert skeleton_entry(s).command == WITNESS_ELIDED
+
+
+# --------------------------------------------------- founding-set witnesses
+
+
+def test_witness_counts_toward_commit_quorum():
+    """3 full + 2 witnesses: crash both non-leader full replicas; the
+    remaining quorum is leader + 2 witnesses and commits MUST proceed on
+    witness skeleton acks."""
+    c = Cluster(n=5, protocol="raft", seed=201, witnesses=["n3", "n4"],
+                state_machine_factory=kv_factory)
+    lead = c.run_until_leader()
+    assert lead is not None and not c.nodes[lead].is_witness()
+    for nid in ("n0", "n1", "n2"):
+        if nid != lead:
+            c.crash(nid)
+    eids = [c.submit(f"put wq{i}=1", via=lead) for i in range(5)]
+    assert c.run_until_committed(eids, 30_000)
+    c.run(1000)  # commit index reaches the witnesses on the next heartbeat
+    # The payload lives only on the leader; the witnesses hold skeletons.
+    for w in ("n3", "n4"):
+        node = c.nodes[w]
+        assert node.commit_index >= 5
+        for idx in range(1, node.commit_index + 1):
+            s = node.slot(idx)
+            if s is not None and not s.entry.command.startswith("__"):
+                assert s.entry.command == WITNESS_ELIDED
+    check_commit_history(c, acked=committed_acks(c, eids))
+
+
+def test_witness_never_campaigns_and_never_wins_prevote():
+    """An isolated voter would start elections and climb terms; an
+    isolated witness must do neither (with or without PreVote)."""
+    for pre_vote in (False, True):
+        cfg = RaftConfig(pre_vote=pre_vote)
+        c = Cluster(n=3, protocol="raft", seed=202, witnesses=["n2"], config=cfg)
+        lead = c.run_until_leader()
+        assert lead is not None and lead != "n2"
+        term0 = c.nodes[lead].term
+        c.partition(["n2"], [n for n in c.nodes if n != "n2"])
+        c.run(20_000)
+        w = c.nodes["n2"]
+        assert w.role is Role.FOLLOWER
+        assert w.term <= c.nodes[lead].term
+        # The two full members never saw a disruption: same leader, same term.
+        assert c.leader() == lead and c.nodes[lead].term == term0
+        c.heal()
+        c.run(2000)
+        assert c.leader() == lead
+
+
+def test_fast_track_commits_with_witness_votes():
+    """Fast-track finalization needs ceil(3*5/4)=4 votes — with two
+    witnesses, every fast commit necessarily counted at least one
+    witness FastVote."""
+    c = Cluster(n=5, protocol="fastraft", seed=203, witnesses=["n3", "n4"])
+    lead = c.run_until_leader()
+    assert lead is not None
+    c.run(500)
+    proposer = [n for n in c.nodes if n != lead and not c.nodes[n].is_witness()][0]
+    eids = [c.submit(f"f{i}", via=proposer) for i in range(6)]
+    assert c.run_until_committed(eids, 30_000)
+    assert c.metrics.counters.get("fast_commits", 0) > 0
+    check_commit_history(c, acked=committed_acks(c, eids))
+
+
+def test_witness_refuses_replica_reads():
+    c = Cluster(n=3, protocol="raft", seed=204, witnesses=["n2"],
+                state_machine_factory=kv_factory)
+    lead = c.run_until_leader()
+    assert lead is not None
+    e = c.submit("SET rk rv", via=lead)
+    assert c.run_until_committed([e])
+    rid = c.read("GET rk", via="n2", mode="replica")
+    c.run(2000)
+    rec = c.reads[rid]
+    assert not rec["ok"] and "witness" in (rec.get("error") or "")
+    # Leader-mode reads submitted AT a witness still work: they forward.
+    rid2 = c.read("GET rk", via="n2", mode="leader")
+    assert c.run_until_reads([rid2], 10_000)
+    assert c.reads[rid2]["ok"] and c.reads[rid2]["value"] == "rv"
+
+
+# --------------------------------------------------------- snapshot elision
+
+
+def test_snapshot_stream_skips_witness():
+    """A witness that falls behind the leader's compaction horizon is
+    caught up by a payload-free base marker, not a chunked snapshot
+    stream — and its own compaction never feeds the snapshot store."""
+    cfg = RaftConfig(snapshot_threshold=8, snapshot_chunk_bytes=256)
+    c = Cluster(n=3, protocol="raft", seed=205, witnesses=["n2"],
+                state_machine_factory=kv_factory, config=cfg)
+    lead = c.run_until_leader()
+    assert lead is not None
+    c.partition(["n2"], [n for n in c.nodes if n != "n2"])
+    eids = [c.submit(f"put s{i}={i}", via=lead) for i in range(30)]
+    assert c.run_until_committed(eids, 60_000)
+    c.run(2000)  # let the leader compact past the witness's log
+    assert c.nodes[lead].snapshot_last_index > 0
+    c.heal()
+    c.run(10_000)
+    w = c.nodes["n2"]
+    assert w.commit_index >= 30
+    assert c.metrics.counters.get("witness_base_advances", 0) >= 1
+    # No snapshot payload ever crossed the wire to (or from) the witness.
+    assert w.snapshot.state is None
+    assert not w.state_machine.snapshot()  # KV machine never saw a payload
+    assert not w.committed_entries()
+    check_commit_history(c, acked=committed_acks(c, eids))
+    check_kv_consistency(c)
+
+
+# ------------------------------------------------------ joint-config paths
+
+
+def test_add_witness_joint_transition_under_load():
+    """Promoting a learner to witness runs through joint consensus under
+    continuous load: config oracle + zero acked loss throughout."""
+    c = Cluster(n=3, protocol="raft", seed=206, state_machine_factory=kv_factory)
+    lead = c.run_until_leader()
+    assert lead is not None
+    c.add_witness("n3")
+    eids = []
+    for i in range(20):
+        eids.append(c.submit(f"put j{i}={i}", via=lead))
+        c.run(150)
+    assert c.run_until_membership(120_000), "witness promotion did not finish"
+    committed = c.nodes[c.leader()].cluster_config
+    assert committed.is_witness("n3") and "n3" in committed.voters
+    more = [c.submit(f"put j2{i}={i}", via=c.leader()) for i in range(5)]
+    assert c.run_until_committed(more, 30_000)
+    c.run(2000)
+    check_commit_history(c, acked=committed_acks(c, eids + more))
+    check_config_oracle(c)
+    check_kv_consistency(c)
+    # The witness went through the learner phase without ever absorbing
+    # payloads into its state machine.
+    assert not c.nodes["n3"].committed_entries()
+
+
+def test_remove_witness_joint_transition():
+    c = Cluster(n=5, protocol="raft", seed=207, witnesses=["n4"])
+    lead = c.run_until_leader()
+    assert lead is not None
+    eids = [c.submit(f"r{i}", via=lead) for i in range(5)]
+    assert c.run_until_committed(eids)
+    c.remove_node("n4")
+    assert c.run_until_membership(120_000)
+    cfg = c.nodes[c.leader()].cluster_config
+    assert "n4" not in cfg.voters and not cfg.witnesses
+    more = [c.submit(f"r2{i}", via=c.leader()) for i in range(3)]
+    assert c.run_until_committed(more)
+    check_commit_history(c, acked=committed_acks(c, eids + more))
+    check_config_oracle(c)
+
+
+def test_witness_survives_leader_crash_during_transition():
+    """Crash the leader while the witness promotion is mid-joint: the new
+    leader finishes (or safely abandons) the change; no acked loss, and
+    the final config is coherent."""
+    c = Cluster(n=3, protocol="raft", seed=208, state_machine_factory=kv_factory)
+    lead = c.run_until_leader()
+    assert lead is not None
+    c.add_witness("n3")
+    eids = []
+    for i in range(8):
+        eids.append(c.submit(f"put t{i}={i}", via=lead))
+        c.run(120)
+    c.crash(lead)
+    c.run(8000)
+    assert c.run_until_leader(60_000) is not None
+    c.run_until_membership(180_000)
+    c.nodes[lead].restart(c.sim.now)
+    c.run(5000)
+    check_commit_history(c, acked=committed_acks(c, eids))
+    check_config_oracle(c)
+    check_kv_consistency(c)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,138 @@
+"""Docs reference checker: fail CI when the prose drifts from the tree.
+
+Scans README.md, DESIGN.md, and docs/*.md for three kinds of claims and
+verifies each against the repository itself:
+
+1. **File references** — markdown links with relative targets, and
+   backticked paths rooted in a known top-level directory
+   (``src/ tests/ benchmarks/ examples/ docs/ tools/``) or a root-level
+   ``*.md``. Each must exist.
+2. **CLI flags** — any backticked ``--flag`` token must be defined by an
+   ``add_argument`` call somewhere in ``benchmarks/*.py`` or
+   ``src/repro/core/fuzzer.py``. Documenting a removed flag fails.
+3. **DESIGN sections** — every ``§N`` citation must name an existing
+   ``## N.`` section of DESIGN.md.
+
+Run from the repo root (CI docs lane)::
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Set, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOCS = ["README.md", "DESIGN.md"] + sorted(
+    os.path.join("docs", f)
+    for f in (os.listdir(os.path.join(REPO, "docs"))
+              if os.path.isdir(os.path.join(REPO, "docs")) else [])
+    if f.endswith(".md")
+)
+
+# Directories whose paths the docs are expected to cite accurately.
+# Artifact/output dirs (bench-out/, fuzz-out/) are deliberately absent:
+# they exist only after a run.
+CHECKED_ROOTS = ("src/", "tests/", "benchmarks/", "examples/", "docs/", "tools/")
+
+FLAG_SOURCES = ["src/repro/core/fuzzer.py"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`]+)`")
+FLAG_RE = re.compile(r"(--[a-z][a-z0-9-]*)")
+SECTION_REF_RE = re.compile(r"§(\d+)")
+SECTION_DEF_RE = re.compile(r"^## (\d+)\.", re.MULTILINE)
+ADD_ARG_RE = re.compile(r"add_argument\(\s*['\"](--[a-z][a-z0-9-]*)['\"]")
+
+
+def _read(rel: str) -> str:
+    with open(os.path.join(REPO, rel)) as f:
+        return f.read()
+
+
+def defined_flags() -> Set[str]:
+    flags: Set[str] = set()
+    bench_dir = os.path.join(REPO, "benchmarks")
+    sources = list(FLAG_SOURCES)
+    sources += sorted(
+        os.path.join("benchmarks", f)
+        for f in os.listdir(bench_dir) if f.endswith(".py")
+    )
+    for rel in sources:
+        flags.update(ADD_ARG_RE.findall(_read(rel)))
+    return flags
+
+
+def defined_sections() -> Set[int]:
+    return {int(n) for n in SECTION_DEF_RE.findall(_read("DESIGN.md"))}
+
+
+def check_doc(rel: str, flags: Set[str], sections: Set[int]) -> List[str]:
+    text = _read(rel)
+    errors: List[str] = []
+    base = os.path.dirname(os.path.join(REPO, rel))
+
+    def exists(target: str) -> bool:
+        t = target.rstrip("/")
+        for cand in (t, t.split(".")[0] + ".py"):  # `dir/file.attr` form
+            if os.path.exists(os.path.join(base, cand)) or os.path.exists(
+                os.path.join(REPO, cand)
+            ):
+                return True
+        return False
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            if not exists(target.split("#")[0]):
+                errors.append(f"{rel}:{lineno}: broken link target `{target}`")
+        for tok in TICK_RE.findall(line):
+            for flag in FLAG_RE.findall(tok):
+                if flag not in flags:
+                    errors.append(
+                        f"{rel}:{lineno}: flag `{flag}` is not defined by any "
+                        "benchmark or the fuzzer CLI"
+                    )
+            if any(c in tok for c in "<>*{} ("):
+                continue  # placeholder / pattern / call, not a literal path
+            if tok.startswith(CHECKED_ROOTS) or (
+                "/" not in tok and tok.endswith(".md")
+            ):
+                if not exists(tok):
+                    errors.append(f"{rel}:{lineno}: path `{tok}` does not exist")
+        for n in SECTION_REF_RE.findall(line):
+            if int(n) not in sections:
+                errors.append(
+                    f"{rel}:{lineno}: cites DESIGN.md §{n}, which does not exist"
+                )
+    return errors
+
+
+def main() -> int:
+    flags = defined_flags()
+    sections = defined_sections()
+    errors: List[str] = []
+    checked: List[Tuple[str, int]] = []
+    for rel in DOCS:
+        if not os.path.exists(os.path.join(REPO, rel)):
+            errors.append(f"{rel}: missing (the docs lane expects it)")
+            continue
+        errs = check_doc(rel, flags, sections)
+        errors.extend(errs)
+        checked.append((rel, len(errs)))
+    for rel, n in checked:
+        print(f"checked {rel}: {'OK' if n == 0 else f'{n} problem(s)'}")
+    if errors:
+        print()
+        for e in errors:
+            print(f"ERROR: {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
