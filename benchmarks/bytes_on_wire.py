@@ -1,0 +1,226 @@
+"""Bytes-on-wire: bandwidth-frugal replication knobs vs the baseline stack.
+
+Sweeps bandwidth-constrained links (``bytes_per_ms``) under one scripted
+workload — steady write bursts plus a follower that repeatedly lags past
+the compaction horizon and must catch up via InstallSnapshot — and compares
+two arms that differ ONLY in the wire-efficiency knobs (DESIGN.md
+section 13):
+
+- baseline: ``RaftConfig`` knobs off — the schedule-preserving
+  configuration the equivalence suite pins.
+- frugal: ``delta_snapshots=True`` + ``ack_piggyback=True`` — delta
+  InstallSnapshot streams against the follower's last-installed base,
+  same-tick acks folded into one reply, redundant empty heartbeats
+  suppressed.
+
+An unmeasured pre-cycle gives the follower its first (full) snapshot, so
+every measured catch-up in the frugal arm can negotiate a delta — the
+steady state of a cluster that keeps re-catching flaky followers.
+
+The schedule is CONVERGENCE-GATED, not wall-clocked: every write is
+awaited and every lag cycle runs until the restarted follower holds the
+leader's whole log again. Both arms therefore commit exactly the same
+entries and finish the same logical schedule; they differ in how many
+bytes the links carried (full snapshot streams vs deltas, empty
+heartbeats vs suppressed ones) and in how long catch-up took — which is
+where frugality turns into throughput once the link is the bottleneck.
+
+Reported per (bandwidth, arm): bytes/commit (total bytes sent on all links
+over entries committed in the measured horizon, from the per-link Recorder
+accounting), committed ops/sec, and the knob counters.
+
+``--check`` asserts the headline claims: at EVERY swept bandwidth the
+frugal arm ships >= 30% fewer bytes/commit and commits no fewer ops/sec
+than baseline, and at the most constrained point it commits strictly more.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+from repro.core.raft import RaftConfig
+from repro.core.sim import Cluster
+from repro.core.statemachine import KVMachine
+
+MTU = 1400.0
+CHUNK_BYTES = 600      # snapshot chunks small enough not to hog a thin link
+BURST = 6              # writes per batch (one batched append per follower)
+N_KEYS = 600           # live KV map the full snapshot must ship
+VALUE_PAD = 120        # value size: full snapshot ~ N_KEYS * VALUE_PAD bytes
+HOT_KEYS = 8           # keys the measured writes churn (the delta stays tiny)
+BURST_PAD = 30         # measured write payload (steady traffic stays modest)
+STEADY_BATCHES = 10    # awaited write batches between lag cycles
+LAG_BATCHES = 25       # awaited write batches committed past the crashed victim
+# Swept link bandwidths (bytes per sim-ms). At the lowest point one full
+# snapshot costs seconds of link time; the highest is comfortable.
+BANDWIDTHS = (40.0, 100.0, 300.0)
+
+
+def _config(frugal: bool) -> RaftConfig:
+    return RaftConfig(
+        snapshot_chunk_bytes=CHUNK_BYTES,
+        # Chunk acks drive window refill, so throughput is ack-paced:
+        # window * chunk / RTT must exceed the link rate or the transfer
+        # crawls regardless of bandwidth.
+        snapshot_chunk_window=4,
+        # Identical in both arms: on a 40 B/ms link a 1 KB append occupies
+        # the wire for 25 ms, so seed-default 150 ms election timeouts
+        # would read queueing delay as leader failure and churn. The
+        # heartbeat doubles as the retransmission timer that rewinds the
+        # chunk window to the acked offset; at the seed-default 50 ms it
+        # re-sends chunks still QUEUED on a thin link and the duplicates
+        # crowd out fresh data, so both arms space it out.
+        heartbeat_interval=250.0,
+        election_timeout_min=1500.0,
+        election_timeout_max=2250.0,
+        max_batch_entries=16,
+        delta_snapshots=frugal,
+        ack_piggyback=frugal,
+    )
+
+
+def run_arm(frugal: bool, bytes_per_ms: float, cycles: int,
+            seed: int = 11) -> Dict[str, float]:
+    """One scripted run; returns bytes/commit + ops/sec over the measured
+    horizon. The schedule (submissions, crashes, compactions, restarts) is
+    identical across arms — only the knobs differ — and every phase is
+    gated on commitment/convergence, so both arms do the same logical work
+    and the clock measures how fast each wire discipline finishes it."""
+    c = Cluster(n=3, protocol="raft", seed=seed, jitter=0.0,
+                bytes_per_ms=bytes_per_ms, mtu_bytes=MTU,
+                config=_config(frugal), record_bytes=True,
+                state_machine_factory=lambda nid: KVMachine())
+    assert c.run_until_leader(60_000) is not None
+    c.run(500)
+    lead = c.leader()
+    victim = [n for n in c.nodes if n != lead][0]
+    # Seed the live key map (unmeasured). Small sub-batches: one 10-entry
+    # append is ~1.6 KB — 40 ms of link time at the thinnest sweep point.
+    for b in range(N_KEYS // 10):
+        eids = c.submit_batch(
+            [f"SET k{b * 10 + i} {'x' * VALUE_PAD}" for i in range(10)],
+            via=lead,
+        )
+        assert c.run_until_committed(eids, 600_000)
+    c.run(2000)
+
+    def write(n_batches: int, tag: str) -> None:
+        """Awaited hot-key write batches: one batched append per follower,
+        committed before the next is submitted."""
+        for i in range(n_batches):
+            eids = c.submit_batch(
+                [f"SET k{(i * BURST + j) % HOT_KEYS} "
+                 f"{'y' * BURST_PAD}{tag}{i}_{j}" for j in range(BURST)],
+                via=lead,
+            )
+            assert c.run_until_committed(eids, 600_000)
+
+    def converge(timeout_ms: float = 600_000) -> None:
+        """Run until the victim holds the leader's whole log again."""
+        target = c.nodes[lead].last_log_index()
+        deadline = c.sim.now + timeout_ms
+        while c.nodes[victim].last_log_index() < target:
+            assert c.sim.now < deadline, "victim failed to converge"
+            c.run(50)
+
+    def lag_cycle(tag: str) -> None:
+        """Crash the victim, commit past it, compact the leader, restart,
+        and run until the victim has fully caught up. The drain before
+        restart lets retransmits queued to the dead victim clear the
+        serial link so the snapshot stream is not stuck behind them."""
+        c.crash(victim)
+        write(LAG_BATCHES, f"{tag}b")
+        c.nodes[lead].compact()
+        c.run(600)
+        c.restart(victim)
+        converge()
+
+    # Unmeasured pre-cycle: the victim's FIRST catch-up is a full stream in
+    # both arms and leaves it holding a base the leader retains.
+    lag_cycle("pre")
+    c.run(1000)
+
+    t0 = c.sim.now
+    bytes0 = c.metrics.total_bytes("sent")
+    commits0 = len(c.metrics.committed_at)
+    for cycle in range(cycles):
+        write(STEADY_BATCHES, f"a{cycle}")
+        lag_cycle(f"m{cycle}")
+    c.run(1000)  # fixed settle, same in both arms
+    elapsed_s = (c.sim.now - t0) / 1000.0
+    commits = len(c.metrics.committed_at) - commits0
+    sent = c.metrics.total_bytes("sent") - bytes0
+    ctr = c.metrics.counters
+    return {
+        "bytes_sent": float(sent),
+        "commits": float(commits),
+        "bytes_per_commit": sent / max(commits, 1),
+        "ops_per_sec": commits / elapsed_s,
+        "acks_folded": float(ctr.get("acks_folded", 0)),
+        "heartbeats_suppressed": float(ctr.get("heartbeats_suppressed", 0)),
+        "delta_snapshots_sent": float(ctr.get("delta_snapshots_sent", 0)),
+        "snapshot_chunks_sent": float(ctr.get("snapshot_chunks_sent", 0)),
+        "elections": float(ctr.get("elections", 0)),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI mode: fewer bandwidth points, fewer cycles")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write result rows as JSON (CI artifact)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert >=30%% bytes/commit reduction at every "
+                         "bandwidth and ops/sec no worse (strictly better "
+                         "at the most constrained point)")
+    args = ap.parse_args(argv)
+    bandwidths = BANDWIDTHS[:2] if args.smoke else BANDWIDTHS
+    cycles = 2 if args.smoke else 3
+
+    rows: List[Dict] = []
+    print("bandwidth_B_per_ms,arm,bytes_per_commit,ops_per_sec,"
+          "acks_folded,heartbeats_suppressed,delta_snapshots_sent")
+    failures: List[str] = []
+    for bw in bandwidths:
+        base = run_arm(frugal=False, bytes_per_ms=bw, cycles=cycles)
+        frugal = run_arm(frugal=True, bytes_per_ms=bw, cycles=cycles)
+        for arm, r in (("baseline", base), ("frugal", frugal)):
+            r.update(arm=arm, bytes_per_ms=bw)
+            rows.append(r)
+            print(f"{bw:.0f},{arm},{r['bytes_per_commit']:.1f},"
+                  f"{r['ops_per_sec']:.1f},{r['acks_folded']:.0f},"
+                  f"{r['heartbeats_suppressed']:.0f},"
+                  f"{r['delta_snapshots_sent']:.0f}")
+        reduction = 1.0 - frugal["bytes_per_commit"] / base["bytes_per_commit"]
+        print(f"  -> bytes/commit -{100 * reduction:.1f}%, ops/sec "
+              f"{base['ops_per_sec']:.1f} -> {frugal['ops_per_sec']:.1f}")
+        if args.check:
+            if reduction < 0.30:
+                failures.append(
+                    f"bw={bw:.0f}: bytes/commit reduction {100 * reduction:.1f}% < 30%"
+                )
+            if frugal["ops_per_sec"] < base["ops_per_sec"]:
+                failures.append(
+                    f"bw={bw:.0f}: frugal ops/sec {frugal['ops_per_sec']:.1f} "
+                    f"< baseline {base['ops_per_sec']:.1f}"
+                )
+            if bw == min(bandwidths) and frugal["ops_per_sec"] <= base["ops_per_sec"]:
+                failures.append(
+                    f"bw={bw:.0f} (most constrained): frugal ops/sec "
+                    f"{frugal['ops_per_sec']:.1f} not strictly above baseline "
+                    f"{base['ops_per_sec']:.1f}"
+                )
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+    for msg in failures:
+        print(f"CHECK FAILED: {msg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

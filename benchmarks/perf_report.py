@@ -131,6 +131,40 @@ def _unreliable(rows: List[Dict]) -> List[Headline]:
     return out
 
 
+def _bytes_on_wire(rows: List[Dict]) -> List[Headline]:
+    out: List[Headline] = []
+    bws = sorted({r["bytes_per_ms"] for r in rows})
+    for bw in bws:
+        arms = {r["arm"]: r for r in rows if r["bytes_per_ms"] == bw}
+        if "baseline" not in arms or "frugal" not in arms:
+            continue
+        red = 1.0 - (
+            arms["frugal"]["bytes_per_commit"]
+            / arms["baseline"]["bytes_per_commit"]
+        )
+        out.append((f"bytes_on_wire/reduction_bw{bw:.0f}", 100.0 * red, "%"))
+    if bws:
+        lo = min(bws)
+        for r in rows:
+            if r["arm"] == "frugal" and r["bytes_per_ms"] == lo:
+                out.append(
+                    (
+                        f"bytes_on_wire/frugal_bytes_per_commit_bw{lo:.0f}",
+                        r["bytes_per_commit"],
+                        "B/commit",
+                    )
+                )
+                out.append(
+                    (
+                        f"bytes_on_wire/frugal_ops_bw{lo:.0f}",
+                        r["ops_per_sec"],
+                        "ops/s",
+                    )
+                )
+                break
+    return out
+
+
 EXTRACTORS = [
     ("throughput", _throughput),
     ("read_latency", _read_latency),
@@ -139,6 +173,7 @@ EXTRACTORS = [
     ("snapshot_transfer", _snapshot),
     ("sim_speed", _sim_speed),
     ("unreliable_scaleout", _unreliable),
+    ("bytes_on_wire", _bytes_on_wire),
 ]
 
 

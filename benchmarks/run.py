@@ -20,9 +20,11 @@ a markdown summary (optionally against a baseline directory).
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
+import time
 from typing import List, Optional, Tuple
 
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
@@ -37,6 +39,7 @@ SUITE: List[Tuple[str, List[str], bool, bool]] = [
     ("membership_churn", [], True, True),
     ("unreliable_scaleout", ["--check"], True, True),
     ("sim_speed", ["--check"], True, True),
+    ("bytes_on_wire", ["--check"], True, True),
     ("latency_vs_loss", [], False, False),
     ("rounds_to_commit", [], False, False),
 ]
@@ -45,9 +48,42 @@ SUITE: List[Tuple[str, List[str], bool, bool]] = [
 MODULE_OF = {"read_latency_scaleout": "read_latency"}
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _stamp_rows(json_path: str, sha: str, wall_s: float, engine: str) -> None:
+    """Embed run provenance into every artifact row (underscore keys so no
+    benchmark's own schema can collide): the commit the numbers were
+    measured at, how long the benchmark process took in real seconds, and
+    which simulator event engine produced the schedule. Comparing two
+    artifact directories without this is guesswork — perf_report deltas
+    are only meaningful when each side says what it measured."""
+    try:
+        with open(json_path) as f:
+            rows = json.load(f)
+    except (OSError, ValueError):
+        return
+    if not isinstance(rows, list):
+        return
+    for r in rows:
+        if isinstance(r, dict):
+            r["_git_sha"] = sha
+            r["_wall_clock_s"] = round(wall_s, 2)
+            r["_engine"] = engine
+    with open(json_path, "w") as f:
+        json.dump(rows, f, indent=2)
+
+
 def run_one(
     name: str, flags: List[str], smoke: bool, has_smoke: bool, has_json: bool,
-    out_dir: str,
+    out_dir: str, git_sha: str = "unknown",
 ) -> int:
     module = MODULE_OF.get(name, name)
     cmd = [sys.executable, os.path.join(BENCH_DIR, f"{module}.py"), *flags]
@@ -61,14 +97,22 @@ def run_one(
         "PYTHONPATH", ""
     )
     print(f"== {name}: {' '.join(cmd[1:])}")
+    t0 = time.monotonic()
     proc = subprocess.run(
         cmd, cwd=REPO_ROOT, env=env, capture_output=True, text=True
     )
+    wall_s = time.monotonic() - t0
     sys.stdout.write(proc.stdout)
     if proc.returncode != 0:
         sys.stdout.write(proc.stderr)
         print(f"== {name}: FAILED (exit {proc.returncode})")
-    elif not has_json:
+    elif has_json:
+        # Engine flags in the entry override the orchestrator default;
+        # benchmarks that sweep engines themselves (sim_speed) also carry a
+        # per-row `engine` key, which this suite-level stamp never touches.
+        engine = flags[flags.index("--engine") + 1] if "--engine" in flags else "slotted"
+        _stamp_rows(json_path, git_sha, wall_s, engine)
+    if proc.returncode == 0 and not has_json:
         # CSV-table benchmarks: the stdout IS the artifact.
         with open(os.path.join(out_dir, f"BENCH_{name}.csv"), "w") as f:
             f.write(proc.stdout)
@@ -106,8 +150,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 2
     os.makedirs(args.out, exist_ok=True)
     failures = []
+    sha = _git_sha()
     for name, flags, has_smoke, has_json in entries:
-        rc = run_one(name, flags, args.smoke, has_smoke, has_json, args.out)
+        rc = run_one(name, flags, args.smoke, has_smoke, has_json, args.out,
+                     git_sha=sha)
         if rc != 0:
             failures.append(name)
     print(

@@ -70,6 +70,12 @@ class SnapshotStore:
         # a learner must not come back believing it is a voter.
         if snapshot.config is not None:
             payload["config"] = snapshot.config.to_wire()
+        # Delta provenance (RaftConfig.delta_snapshots): which base the
+        # snapshot's state was reconstructed against, when it arrived as a
+        # delta stream. Written only when set so pre-delta files are
+        # byte-stable.
+        if getattr(snapshot, "delta_base", -1) >= 0:
+            payload["delta_base"] = snapshot.delta_base
         tmp = self._path(node_id) + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f)
@@ -104,6 +110,7 @@ class SnapshotStore:
             members=tuple(payload["members"]),
             dedup=dedup,
             config=None if cfg is None else ClusterConfig.from_wire(cfg),
+            delta_base=payload.get("delta_base", -1),
         )
 
     def latest_index(self, node_id: str) -> int:

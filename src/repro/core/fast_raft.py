@@ -121,6 +121,15 @@ class FastRaftNode(RaftNode):
         # When set (window-vote handling), finalized slots accumulate here
         # and are broadcast as batched FastFinalize windows afterwards.
         self._finalize_accum: Optional[List[Tuple[int, Entry]]] = None
+        # Ack piggybacking (config.ack_piggyback): single-slot FastVotes
+        # cast in one delivery tick, buffered per leader as (index,
+        # entry_id) pairs and flushed as ONE FastVote (head vote +
+        # multi_votes) by _flush_acks. _vote_buf_term is the term the
+        # buffered votes were cast in — the flushed message is stamped
+        # with it, so a term bump mid-tick leaves the votes exactly as
+        # stale as an in-flight unbuffered message would be.
+        self._vote_buf: Dict[NodeId, List[Tuple[int, EntryId]]] = {}
+        self._vote_buf_term = 0
         # Liveness nicety: re-propose sub-threshold entries seen during
         # recovery (safe — dedup by entry_id).
         self.readopt_uncommitted = True
@@ -278,6 +287,16 @@ class FastRaftNode(RaftNode):
             return self._record_fast_vote(index, entry_id, self.id, now)
         if self.leader_id is None:
             return []
+        if self.config.ack_piggyback:
+            # Fold same-tick single-slot votes into one FastVote per
+            # leader per delivery tick (flushed by _flush_acks).
+            if self._ack_buf_time < 0 or not self._vote_buf:
+                self._vote_buf_term = self.term
+            self._vote_buf.setdefault(self.leader_id, []).append(
+                (index, entry_id)
+            )
+            self._ack_buf_time = now
+            return []
         return [
             (
                 self.leader_id,
@@ -310,6 +329,25 @@ class FastRaftNode(RaftNode):
             return self._apply_window_votes(
                 msg.index, list(msg.window_votes), msg.voter, now
             )
+        if msg.multi_votes:
+            # Piggybacked vote: the head (index, entry_id) plus folded
+            # same-tick votes. Record them all inside one finalize-accum
+            # scope so slots they complete leave as batched FastFinalize
+            # windows (same coalescing as window votes).
+            outer = self._finalize_accum is None
+            if outer:
+                self._finalize_accum = []
+            out: Outputs = []
+            try:
+                votes = [(msg.index, msg.entry_id)] + list(msg.multi_votes)
+                for index, eid in votes:
+                    if eid is not None:
+                        out += self._record_fast_vote(index, eid, msg.voter, now)
+            finally:
+                if outer:
+                    acc, self._finalize_accum = self._finalize_accum, None
+                    out += self._broadcast_finalize_windows(acc)
+            return out
         if msg.entry_id is None:
             return []
         return self._record_fast_vote(msg.index, msg.entry_id, msg.voter, now)
@@ -494,6 +532,32 @@ class FastRaftNode(RaftNode):
         return i
 
     # --------------------------------------------------------------- ticks
+
+    def _flush_acks(self) -> None:
+        # Buffered FastVotes leave first (they were cast before any
+        # AppendEntries ack buffered later the same tick could matter),
+        # stamped with the term they were cast in; then the base class
+        # flushes AppendEntries acks and clears the shared buffer clock.
+        if self._vote_buf:
+            for dst, votes in self._vote_buf.items():
+                head_index, head_eid = votes[0]
+                self._outbox.append(
+                    (
+                        dst,
+                        FastVote(
+                            term=self._vote_buf_term,
+                            src=self.id,
+                            index=head_index,
+                            entry_id=head_eid,
+                            voter=self.id,
+                            multi_votes=tuple(votes[1:]),
+                        ),
+                    )
+                )
+                if len(votes) > 1:
+                    self._count("fast_votes_folded", len(votes) - 1)
+            self._vote_buf = {}
+        super()._flush_acks()
 
     def _protocol_idle(self) -> bool:
         # _tick_protocol below is a no-op exactly when there are no leader
@@ -709,3 +773,4 @@ class FastRaftNode(RaftNode):
         self.inflight = {}
         self._finalized_held = {}
         self._finalize_accum = None
+        self._vote_buf = {}

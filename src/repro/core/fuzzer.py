@@ -119,6 +119,20 @@ def preset_failure_profiles(
     return out
 
 
+# Named (bytes_per_ms, mtu_bytes) link presets for the --link-profile CLI.
+# Pure data: the chosen numbers are serialized into the trace profile, so a
+# replay needs no preset lookup. "thin" is a serialization-limited pipe
+# where appends and snapshot chunks queue behind each other; "congested"
+# crawls AND fragments (per-packet loss bites big messages hardest);
+# "mtu-lossy" keeps infinite rate but makes loss size-aware.
+LINK_PROFILES: Dict[str, Tuple[float, float]] = {
+    "": (0.0, 0.0),
+    "thin": (60.0, 1400.0),
+    "congested": (25.0, 512.0),
+    "mtu-lossy": (0.0, 256.0),
+}
+
+
 @dataclasses.dataclass
 class FuzzProfile:
     """Cluster shape + protocol knobs a trace runs against. Serialized into
@@ -154,6 +168,17 @@ class FuzzProfile:
     # witness members.
     failure_profile: str = ""
     witnesses: int = 0
+    # Link-capacity knobs (bandwidth-constrained fuzzing). 0.0 = infinite
+    # capacity, the schedule every pre-link trace was minted under.
+    # ``bytes_per_ms`` gives each directed link a serial transmit rate
+    # (messages queue FIFO behind each other); ``mtu_bytes`` makes loss
+    # per-packet, so big messages die more often than small ones.
+    bytes_per_ms: float = 0.0
+    mtu_bytes: float = 0.0
+    # Wire-efficiency knobs (DESIGN.md section 13) — defaults off so
+    # pre-knob traces replay byte-identically.
+    delta_snapshots: bool = False
+    ack_piggyback: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -177,6 +202,8 @@ class FuzzProfile:
             snapshot_chunk_window=self.snapshot_chunk_window,
             read_coalesce_window=self.read_coalesce_window,
             election_noop=self.election_noop,
+            delta_snapshots=self.delta_snapshots,
+            ack_piggyback=self.ack_piggyback,
         )
 
 
@@ -267,6 +294,8 @@ class _TraceRunner:
             clock_drift=p.clock_drift,
             engine=engine,
             witnesses=wits,
+            bytes_per_ms=p.bytes_per_ms,
+            mtu_bytes=p.mtu_bytes,
         )
         if p.failure_profile:
             self.cluster.set_failure_profiles(
@@ -900,13 +929,28 @@ def main(argv=None) -> int:
         help="make the last W founding nodes quorum-only witnesses "
         "(flat mode only)",
     )
+    ap.add_argument(
+        "--link-profile", default="", choices=sorted(LINK_PROFILES),
+        help="bandwidth-constrain every link with a named "
+        "(bytes_per_ms, mtu_bytes) preset; '' = infinite capacity",
+    )
+    ap.add_argument(
+        "--wire-frugal", action="store_true",
+        help="run with RaftConfig.delta_snapshots + ack_piggyback on "
+        "(the bandwidth-frugal stack, DESIGN.md section 13)",
+    )
     args = ap.parse_args(argv)
 
+    link_bpm, link_mtu = LINK_PROFILES[args.link_profile]
     profile = FuzzProfile(
         read_coalesce_window=args.coalesce_window,
         election_noop=args.election_noop,
         failure_profile=args.failure_profile,
         witnesses=args.witnesses,
+        bytes_per_ms=link_bpm,
+        mtu_bytes=link_mtu,
+        delta_snapshots=args.wire_frugal,
+        ack_piggyback=args.wire_frugal,
     )
     rows: List[Dict[str, Any]] = []
     failures = 0

@@ -39,6 +39,7 @@ from repro.core.sim import (
     LinkModel,
     MembershipError,
     Simulation,
+    wire_size,
 )
 from repro.core.statemachine import LogListMachine, StateMachine
 from repro.core.types import Entry, EntryId, Message, NodeId
@@ -260,6 +261,8 @@ class HierarchicalCluster:
         global_latency: float = 10.0,
         jitter: float = 0.0,
         msg_overhead: float = 0.0,
+        global_bytes_per_ms: float = 0.0,
+        global_mtu_bytes: float = 0.0,
         tick_interval: float = 10.0,
         config: Optional[RaftConfig] = None,
         global_config: Optional[RaftConfig] = None,
@@ -267,14 +270,29 @@ class HierarchicalCluster:
         engine: str = "slotted",
         link_rng: str = "shared",
         link_rng_backend: str = "auto",
+        relay_batch_window: float = 0.0,
+        record_bytes: bool = False,
     ):
         self.sim = Simulation(seed)
         self.protocol = protocol
         self.engine = engine
         self.pod_ids = [f"pod{i}" for i in range(n_pods)]
-        self.global_link = LinkModel(global_loss, global_latency, jitter)
+        # The slow inter-pod links can be size-aware exactly like pod-local
+        # ones (CD-Raft's economy argument is ABOUT these links); both
+        # knobs default to 0.0 = the seed's pure-latency global network.
+        self.global_link = LinkModel(global_loss, global_latency, jitter,
+                                     bytes_per_ms=global_bytes_per_ms,
+                                     mtu_bytes=global_mtu_bytes)
+        self._global_link_busy: Dict[Tuple[str, str], float] = {}
         self.global_metrics = Recorder()
+        self.record_bytes = record_bytes
         self.tick_interval = tick_interval
+        # Down-propagation batching: >0 buffers globally-committed entries
+        # per pod and injects them as ONE ordered client batch per window
+        # (0.0 = seed behavior, one local entry injected per global commit).
+        self.relay_batch_window = relay_batch_window
+        self._relay_buf: Dict[str, List[Tuple[Any, EntryId]]] = {}
+        self._relay_flush_scheduled: Dict[str, bool] = {}
         # Per-pod base machine factory (None = LogListMachine); each host's
         # machine is wrapped in a ShadowDeliveryMachine so globally-committed
         # entries disseminate through the replicated apply path.
@@ -307,6 +325,7 @@ class HierarchicalCluster:
                 engine=engine,
                 link_rng=link_rng,
                 link_rng_backend=link_rng_backend,
+                record_bytes=record_bytes,
             )
 
         # Global tier: one logical member per pod. The default config
@@ -449,15 +468,40 @@ class HierarchicalCluster:
         for m in copies:
             self._global_transmit(src, dst, m)
 
+    def _global_bytes_accounted(self) -> bool:
+        link = self.global_link
+        return self.record_bytes or link.bytes_per_ms > 0 or link.mtu_bytes > 0
+
     def _global_transmit(self, src: str, dst: str, msg: Message) -> None:
-        if self.global_link.loss > 0 and self.sim.rng.random() < self.global_link.loss:
+        link = self.global_link
+        account = self._global_bytes_accounted()
+        size = wire_size(msg) if account else 0
+        if account:
+            self.global_metrics.bytes_sent(src, dst, type(msg).__name__, size)
+        if link.loss > 0 and self.sim.rng.random() < min(
+            1.0, link.drop_probability(size)
+        ):
             self.global_metrics.count("dropped")
+            if account:
+                self.global_metrics.bytes_dropped(src, dst, type(msg).__name__, size)
             return
-        delay = self.global_link.sample_latency(self.sim.rng)
+        delay = link.sample_latency(self.sim.rng)
+        overhead = link.serialization_cost(size)
+        if overhead > 0:
+            # Same per-directed-link queueing as Cluster._transmit: a fat
+            # message occupies the slow inter-pod link proportionally to
+            # its size. Skipped entirely at 0 (seed-identical schedules).
+            start = max(self.sim.now, self._global_link_busy.get((src, dst), 0.0))
+            self._global_link_busy[(src, dst)] = start + overhead
+            delay += (start + overhead) - self.sim.now
         if self.engine == "legacy":
             def deliver():
                 n = self.global_nodes.get(dst)
                 if n is not None and n.alive and self.pod_available(dst):
+                    if self._global_bytes_accounted():
+                        self.global_metrics.bytes_delivered(
+                            src, dst, type(msg).__name__, wire_size(msg)
+                        )
                     self._global_dispatch(dst, n.on_message(msg, self.sim.now))
 
             self.sim.schedule(delay, deliver)
@@ -474,6 +518,10 @@ class HierarchicalCluster:
         closure — a pod that loses its leader mid-flight drops the message."""
         n = self.global_nodes.get(dst)
         if n is not None and n.alive and self.pod_available(dst):
+            if self._global_bytes_accounted():
+                self.global_metrics.bytes_delivered(
+                    src, dst, type(msg).__name__, wire_size(msg)
+                )
             self._global_dispatch(dst, n.on_message(msg, self.sim.now))
 
     # ------------------------------------------------------ down-propagation
@@ -481,17 +529,52 @@ class HierarchicalCluster:
     def _make_global_apply(self, pod: str) -> Callable[[int, Entry], None]:
         def on_apply(index: int, entry: Entry) -> None:
             # Globally committed: disseminate into this pod's local log.
+            cmd = f"{GLOBAL_SHADOW_PREFIX}{index}:{entry.command}"
+            eid = EntryId(f"{pod}-global", index)
+            if self.relay_batch_window > 0:
+                # Relay batching: buffer the announcement and flush every
+                # buffered commit as ONE ordered client batch per window.
+                # FIFO is preserved (the buffer is in global apply order and
+                # a batch appends in list order); (index, entry_id) dedup at
+                # the pod keeps retried/re-announced entries idempotent.
+                self._relay_buf.setdefault(pod, []).append((cmd, eid))
+                if not self._relay_flush_scheduled.get(pod):
+                    self._relay_flush_scheduled[pod] = True
+                    self.sim.schedule(
+                        self.relay_batch_window, lambda: self._relay_flush(pod)
+                    )
+                return
             local = self.pods[pod]
             lead = local.leader()
-            cmd = f"{GLOBAL_SHADOW_PREFIX}{index}:{entry.command}"
             if lead is not None:
                 node = local.nodes[lead]
-                eid = EntryId(f"{pod}-global", index)
                 local.dispatch(
                     lead, node.client_request(cmd, self.sim.now, entry_id=eid)
                 )
 
         return on_apply
+
+    def _relay_flush(self, pod: str) -> None:
+        """Flush one pod's buffered global-commit announcements as a single
+        multi-entry client batch. With no live pod leader the flush retries
+        a window later (strictly better delivery than the unbatched path,
+        which drops announcements made during leaderless spells)."""
+        buf = self._relay_buf.get(pod)
+        if not buf:
+            self._relay_flush_scheduled[pod] = False
+            return
+        local = self.pods[pod]
+        lead = local.leader()
+        if lead is None:
+            self.sim.schedule(self.relay_batch_window,
+                              lambda: self._relay_flush(pod))
+            return
+        self._relay_buf[pod] = []
+        self._relay_flush_scheduled[pod] = False
+        node = local.nodes[lead]
+        local.dispatch(lead, node.client_request_batch(buf, self.sim.now))
+        self.global_metrics.count("relay_batches")
+        self.global_metrics.count("relay_batched_entries", len(buf))
 
     def _pod_sm_factory(self, pod: str) -> Callable[[NodeId], StateMachine]:
         """Factory wrapping each host's machine with shadow-entry delivery.

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.types import Entry, EntryId, NodeId
 
@@ -51,6 +51,10 @@ class Recorder:
         # registers one per call). Purely observational: watchers never
         # schedule events or perturb the simulation schedule.
         self.commit_watchers: List[set] = []
+        # Wire accounting: (src, dst, msg class) -> [sent, delivered,
+        # dropped] byte totals. Purely observational (wire_size draws no
+        # randomness), so recording never perturbs the schedule.
+        self.link_bytes: Dict[Tuple[NodeId, NodeId, str], List[int]] = {}
 
     def watch_commits(self, pending: set) -> None:
         """Register ``pending`` (a set of EntryIds) to be drained as those
@@ -104,6 +108,59 @@ class Recorder:
 
     def count(self, kind: str, n: int = 1) -> None:
         self.counters[kind] = self.counters.get(kind, 0) + n
+
+    # -- wire accounting ---------------------------------------------------
+
+    def bytes_sent(self, src: NodeId, dst: NodeId, cls: str, n: int) -> None:
+        row = self.link_bytes.get((src, dst, cls))
+        if row is None:
+            row = self.link_bytes[(src, dst, cls)] = [0, 0, 0]
+        row[0] += n
+
+    def bytes_delivered(self, src: NodeId, dst: NodeId, cls: str, n: int) -> None:
+        row = self.link_bytes.get((src, dst, cls))
+        if row is None:
+            row = self.link_bytes[(src, dst, cls)] = [0, 0, 0]
+        row[1] += n
+
+    def bytes_dropped(self, src: NodeId, dst: NodeId, cls: str, n: int) -> None:
+        row = self.link_bytes.get((src, dst, cls))
+        if row is None:
+            row = self.link_bytes[(src, dst, cls)] = [0, 0, 0]
+        row[2] += n
+
+    def total_bytes(self, which: str = "sent") -> int:
+        """Total bytes across every link and message class.
+
+        ``which`` is one of ``sent`` / ``delivered`` / ``dropped``.
+        """
+        i = ("sent", "delivered", "dropped").index(which)
+        return sum(row[i] for row in self.link_bytes.values())
+
+    def bytes_by_class(self, which: str = "sent") -> Dict[str, int]:
+        """Byte totals per message class, summed over links."""
+        i = ("sent", "delivered", "dropped").index(which)
+        out: Dict[str, int] = {}
+        for (_, _, cls), row in self.link_bytes.items():
+            out[cls] = out.get(cls, 0) + row[i]
+        return out
+
+    def bytes_by_link(self, which: str = "sent") -> Dict[Tuple[NodeId, NodeId], int]:
+        """Byte totals per directed (src, dst) link, summed over classes."""
+        i = ("sent", "delivered", "dropped").index(which)
+        out: Dict[Tuple[NodeId, NodeId], int] = {}
+        for (src, dst, _), row in self.link_bytes.items():
+            out[(src, dst)] = out.get((src, dst), 0) + row[i]
+        return out
+
+    def bytes_per_commit(self, which: str = "sent") -> Optional[float]:
+        """Wire bytes divided by distinct committed entries — the headline
+        bandwidth-efficiency metric for benchmarks. None before the first
+        commit."""
+        commits = len(self.committed_at)
+        if commits == 0:
+            return None
+        return self.total_bytes(which) / commits
 
     # -- queries -----------------------------------------------------------
 

@@ -57,6 +57,8 @@ from repro.core.types import (
     SlotState,
     Snapshot,
     majority,
+    snapshot_delta_from_bytes,
+    snapshot_delta_to_bytes,
     snapshot_from_bytes,
     snapshot_to_bytes,
 )
@@ -227,6 +229,22 @@ class RaftConfig:
     # untouched — the node acks and votes at full speed; only its applied
     # state (and thus replica-read freshness) trails. 0 = apply inline.
     apply_lag_ms: float = 0.0
+    # ----- wire-efficiency knobs (DESIGN.md §13). Both default OFF: the
+    # on-wire behavior, and therefore every deterministic schedule, is
+    # bit-identical to the seed until a deployment opts in. -----
+    # Delta snapshots: the chunked InstallSnapshot stream negotiates
+    # against the follower's advertised snapshot id (AppendEntriesReply.
+    # snap_index) and ships only the state DELTA against a retained base
+    # the leader still holds — O(changed keys) for KVMachine. Machines
+    # without delta support (LogListMachine) and followers whose base
+    # drifted fall back to the full stream.
+    delta_snapshots: bool = False
+    # Ack piggybacking + heartbeat coalescing: followers fold same-tick
+    # AppendEntries acks (and FastRaft acceptors their same-tick
+    # FastVotes) into ONE reply per delivery tick, and the leader
+    # suppresses the empty heartbeat to a peer that already received
+    # data-bearing (round-stamped) traffic this interval.
+    ack_piggyback: bool = False
 
 
 @dataclasses.dataclass(slots=True)
@@ -246,6 +264,16 @@ class _SnapshotTransfer:
     offset: int = 0
     send_cursor: int = 0
     rewind_mark: int = -1
+    # Base snapshot id this stream is a delta against (-1 = full stream);
+    # stamped on every chunk so the receiver validates applicability.
+    delta_base: int = -1
+    # Acked offset at the last heartbeat-triggered fresh round. Under
+    # config.ack_piggyback the heartbeat only rewinds and resends when the
+    # offset has not moved past this mark — i.e. the transfer actually
+    # stalled. Rewinding on every interval re-sends chunks still QUEUED on
+    # a serialization-limited link; the duplicates then crowd out fresh
+    # chunks and the queue (and ack RTT) grows until the link collapses.
+    hb_mark: int = -1
 
 
 @dataclasses.dataclass(slots=True)
@@ -357,8 +385,23 @@ class RaftNode:
         # Chunked snapshot transfers in progress (leader side), per follower.
         self._snap_xfer: Dict[NodeId, _SnapshotTransfer] = {}
         # Chunked snapshot being received (follower side):
-        # {"last_index", "last_term", "data": bytearray}.
+        # {"last_index", "last_term", "delta_base", "data": bytearray}.
         self._incoming_snap: Optional[dict] = None
+        # Delta-snapshot negotiation (config.delta_snapshots), leader side:
+        # machine states of recently superseded snapshots retained as delta
+        # bases (snapshot last_index -> opaque state; bounded, oldest ages
+        # out), and each peer's advertised snapshot id from its
+        # AppendEntriesReply.snap_index.
+        self._delta_bases: Dict[int, Any] = {}
+        self._peer_snap_index: Dict[NodeId, int] = {}
+        # Heartbeat coalescing (config.ack_piggyback), leader side: peers
+        # that received data-bearing traffic since the last broadcast —
+        # their empty heartbeat this interval is redundant — and each
+        # peer's match_index at the last broadcast, so the broadcast can
+        # tell an ack-clocked append pipeline (progress since last beat:
+        # leave it alone) from a stalled one (reset and retransmit).
+        self._data_sent: set = set()
+        self._hb_match: Dict[NodeId, int] = {}
 
         # Leader-side client-command coalescing (config.batch_window > 0).
         self._batch_buffer: List[Tuple[Any, EntryId]] = []
@@ -483,6 +526,13 @@ class RaftNode:
         # Replies generated at points with no Outputs channel (e.g. reads
         # unblocked inside _advance_commit); drained by on_message/on_tick.
         self._outbox: Outputs = []
+        # Ack piggybacking (config.ack_piggyback), non-leader side: success
+        # AppendEntries replies buffered per leader and folded, flushed
+        # into the outbox once sim time advances past the buffering tick
+        # (one reply per delivery tick; a tick always arrives within
+        # tick_interval, bounding the delay). _ack_buf_time < 0 = empty.
+        self._ack_buf: Dict[NodeId, AppendEntriesReply] = {}
+        self._ack_buf_time = -1.0
         # Membership-change driving (leader side): set when a committed
         # final config excludes us as a voter — we broadcast the commit
         # once more, then step down (dissertation rule: a removed leader
@@ -727,6 +777,7 @@ class RaftNode:
         self._inflight = {}
         self._pipe_next = {}
         self._snap_xfer = {}
+        self._hb_match = {}
         self._pending_stepdown = False
         self._reset_read_leadership_state()
         self._reset_election_timer(now)
@@ -794,6 +845,7 @@ class RaftNode:
         self._inflight = {}
         self._pipe_next = {}
         self._snap_xfer = {}
+        self._hb_match = {}
         self._reset_read_leadership_state()
         self.next_heartbeat = now  # fire immediately
         self._count("leader_elected")
@@ -990,6 +1042,8 @@ class RaftNode:
     def on_tick(self, now: float) -> Outputs:
         if not self.alive:
             return []
+        if self._ack_buf_time >= 0 and now > self._ack_buf_time:
+            self._flush_acks()
         if (
             not self._legacy_mode
             and self.role is not Role.LEADER
@@ -998,6 +1052,7 @@ class RaftNode:
             and not self._replica_reads
             and not self._outbox
             and not self._apply_pending
+            and self._ack_buf_time < 0
             and self._protocol_idle()
         ):
             # Idle non-leader fast path: with the election timer unexpired
@@ -1092,6 +1147,22 @@ class RaftNode:
             out = out + self._outbox
             self._outbox = []
         return out
+
+    def _flush_acks(self) -> None:
+        """Release piggybacked acks (config.ack_piggyback) into the outbox.
+
+        Called from the on_tick preamble at the first tick strictly after
+        the last buffering time, so every ack folded within one tick window
+        leaves as one reply — even when serialization-delayed links spread
+        the arrivals across the window. The delay is bounded by
+        tick_interval, indistinguishable from network latency to the leader
+        (which already tolerates arbitrarily reordered replies).
+        FastRaft hook: overridden to flush buffered FastVotes too."""
+        if self._ack_buf:
+            for dst, reply in self._ack_buf.items():
+                self._outbox.append((dst, reply))
+            self._ack_buf = {}
+        self._ack_buf_time = -1.0
 
     def _tick_protocol(self, now: float) -> Outputs:
         return []
@@ -1206,12 +1277,54 @@ class RaftNode:
                 # insertion order IS sorted order: pop oldest-first.
                 while len(self._round_sent) > 1024:
                     del self._round_sent[next(iter(self._round_sent))]
+        if self.config.ack_piggyback:
+            had_data, self._data_sent = self._data_sent, set()
+        else:
+            had_data = ()
         out: Outputs = []
         for p in self.peers():
-            self._inflight[p] = 0
-            self._pipe_next[p] = self.next_index.get(p, self.last_log_index() + 1)
+            # Under ack piggybacking the broadcast is a STALL-RECOVERY
+            # timer, not an unconditional retransmitter: a pipeline whose
+            # acked cursor (chunk offset, or match_index with traffic
+            # outstanding) advanced since the last broadcast is ack-clocked
+            # and alive, and re-opening its window would re-send bytes
+            # still QUEUED on the link — on a serialization-limited link
+            # the duplicates crowd out fresh data until progress collapses.
+            # Only a pipeline that went a whole interval without progress
+            # gets the classic reset-and-resend. Knob off, every broadcast
+            # resets, exactly the seed behavior.
+            xfer = self._snap_xfer.get(p)
+            if xfer is not None:
+                progressed = (
+                    self.config.ack_piggyback and xfer.offset != xfer.hb_mark
+                )
+                xfer.hb_mark = xfer.offset
+            else:
+                m = self.match_index.get(p, 0)
+                progressed = (
+                    self.config.ack_piggyback
+                    and m > self._hb_match.get(p, -1)
+                    and self._inflight.get(p, 0) > 0
+                )
+                self._hb_match[p] = m
+            if not progressed:
+                self._inflight[p] = 0
+                self._pipe_next[p] = self.next_index.get(
+                    p, self.last_log_index() + 1
+                )
             msgs = self._replicate_to_peer(p)
             if not msgs:
+                if p in had_data:
+                    # Heartbeat coalescing (config.ack_piggyback): this
+                    # peer received data-bearing round-stamped traffic
+                    # since the last broadcast, so the empty heartbeat is
+                    # redundant — its liveness/commit/watermark payload
+                    # already traveled. The lease basis may trail by one
+                    # interval (the data carried the PREVIOUS round id),
+                    # which only shortens the lease — the safe direction —
+                    # and the next quiet interval resumes heartbeats.
+                    self._count("heartbeats_suppressed")
+                    continue
                 msgs = [(p, self._heartbeat_for(p))]
             out += msgs
         self._count("msgs_out", len(out))
@@ -1243,9 +1356,14 @@ class RaftNode:
         ni = self.next_index.get(peer, self.last_log_index() + 1)
         peer_is_witness = self.cluster_config.is_witness(peer)
         if self.snapshot is not None and ni <= self.snapshot.last_index:
-            if peer_is_witness:
-                return self._send_witness_base(peer)
-            return self._send_snapshot(peer)
+            snap_out = (
+                self._send_witness_base(peer)
+                if peer_is_witness
+                else self._send_snapshot(peer)
+            )
+            if snap_out and self.config.ack_piggyback:
+                self._data_sent.add(peer)
+            return snap_out
         out: Outputs = []
         batch = max(1, self.config.max_batch_entries)
         depth = max(1, self.config.max_inflight_batches)
@@ -1299,6 +1417,8 @@ class RaftNode:
             self._inflight[peer] = self._inflight.get(peer, 0) + 1
             start += len(entries)
             self._pipe_next[peer] = start
+        if out and self.config.ack_piggyback:
+            self._data_sent.add(peer)
         return out
 
     def _send_witness_base(self, peer: NodeId) -> Outputs:
@@ -1368,17 +1488,25 @@ class RaftNode:
         if xfer is None or xfer.last_index != self.snapshot.last_index:
             # New transfer (or the leader compacted again mid-transfer, which
             # changes the snapshot identity and restarts the stream).
+            data, delta_base = self._snapshot_stream_for(peer)
             xfer = _SnapshotTransfer(
                 last_index=self.snapshot.last_index,
                 last_term=self.snapshot.last_term,
-                data=snapshot_to_bytes(self.snapshot),
+                data=data,
+                delta_base=delta_base,
             )
             self._snap_xfer[peer] = xfer
             self._count("snapshots_sent")
         if self._inflight.get(peer, 0) == 0:
             # Fresh round (first send, or a heartbeat retransmission after
-            # the window went quiet): resume from the acked cursor.
-            xfer.send_cursor = xfer.offset
+            # the window went quiet): resume from the acked cursor — unless
+            # ack piggybacking is on AND the acked cursor advanced since the
+            # last fresh round, in which case the ack-clocked pipeline is
+            # alive and rewinding would only inject duplicate chunks into
+            # the link queue; top up from send_cursor instead.
+            if not self.config.ack_piggyback or xfer.offset == xfer.hb_mark:
+                xfer.send_cursor = xfer.offset
+            xfer.hb_mark = xfer.offset
         out: Outputs = []
         while self._inflight.get(peer, 0) < w:
             off = xfer.send_cursor
@@ -1402,6 +1530,7 @@ class RaftNode:
                         total_bytes=len(xfer.data),
                         done=done,
                         leader_commit=self.commit_index,
+                        delta_base=xfer.delta_base,
                     ),
                 )
             )
@@ -1410,6 +1539,27 @@ class RaftNode:
             if done:
                 break
         return out
+
+    def _snapshot_stream_for(self, peer: NodeId) -> Tuple[bytes, int]:
+        """The serialized stream a chunked transfer to ``peer`` will carry:
+        the state DELTA against a retained base both sides hold when delta
+        negotiation succeeds (config.delta_snapshots, the peer advertised a
+        base we retained, and the machine supports deltas), else the full
+        snapshot. Returns (data, delta_base); delta_base == -1 for full."""
+        if self.config.delta_snapshots:
+            base_idx = self._peer_snap_index.get(peer, -1)
+            base_state = self._delta_bases.get(base_idx)
+            if 0 < base_idx < self.snapshot.last_index and base_state is not None:
+                delta = self.state_machine.snapshot_delta(
+                    base_state, self.snapshot.state
+                )
+                if delta is not None:
+                    self._count("delta_snapshots_sent")
+                    return (
+                        snapshot_delta_to_bytes(self.snapshot, delta, base_idx),
+                        base_idx,
+                    )
+        return snapshot_to_bytes(self.snapshot), -1
 
     def _handle_AppendEntriesArgs(self, msg: AppendEntriesArgs, now: float) -> Outputs:
         if msg.term < self.term:
@@ -1483,7 +1633,25 @@ class RaftNode:
             success=True,
             match_index=msg.prev_log_index + len(msg.entries),
             hb_id=msg.hb_id,
+            snap_index=(
+                self.snapshot_last_index if self.config.delta_snapshots else -1
+            ),
         )
+        if self.config.ack_piggyback:
+            # Fold same-tick acks to this leader into ONE reply. Safe
+            # because the leader already treats match_index and acked
+            # rounds as monotone maxima (network reordering forces that),
+            # so the folded reply carries everything the individual acks
+            # did; n_acks releases their pipeline slots in one step.
+            buf = self._ack_buf.get(msg.src)
+            if buf is not None and buf.term == self.term:
+                reply.match_index = max(reply.match_index, buf.match_index)
+                reply.hb_id = max(reply.hb_id, buf.hb_id)
+                reply.n_acks = buf.n_acks + 1
+                self._count("acks_folded")
+            self._ack_buf[msg.src] = reply
+            self._ack_buf_time = now
+            return deferred
         return deferred + [(msg.src, reply)]
 
     def _handle_AppendEntriesReply(self, msg: AppendEntriesReply, now: float) -> Outputs:
@@ -1493,8 +1661,14 @@ class RaftNode:
         # that it still recognizes this leadership; echoed round ids feed
         # the lease / ReadIndex confirmation accounting.
         ack_out = self._note_round_ack(msg.src, msg.hb_id, now)
+        if msg.snap_index >= 0:
+            self._peer_snap_index[msg.src] = msg.snap_index
         if msg.success:
-            self._inflight[msg.src] = max(0, self._inflight.get(msg.src, 0) - 1)
+            # n_acks > 1 = a piggybacked reply folding that many acks;
+            # release all their pipeline slots (default 1 otherwise).
+            self._inflight[msg.src] = max(
+                0, self._inflight.get(msg.src, 0) - msg.n_acks
+            )
             old_match = self.match_index.get(msg.src, 0)
             if msg.match_index > old_match:
                 self.match_index[msg.src] = msg.match_index
@@ -2409,6 +2583,19 @@ class RaftNode:
             self._entry_index.pop(s.entry.entry_id, None)
         cfg_at = self._config_at(upto)
         witness = self.is_witness()
+        if (
+            self.config.delta_snapshots
+            and not witness
+            and self.snapshot is not None
+            and self.snapshot.state is not None
+        ):
+            # Retain the outgoing snapshot's machine state as a delta
+            # base: a follower still holding it is caught up with only
+            # the changed keys. Bounded retention — oldest bases age out,
+            # and a peer whose base aged out just gets the full stream.
+            self._delta_bases[self.snapshot.last_index] = self.snapshot.state
+            while len(self._delta_bases) > 4:
+                del self._delta_bases[min(self._delta_bases)]
         self.snapshot = Snapshot(
             last_index=upto,
             last_term=last_term,
@@ -2610,8 +2797,30 @@ class RaftNode:
                     ),
                 )
             ]
+        if msg.delta_base >= 0 and self.snapshot_last_index != msg.delta_base:
+            # A delta stream against a base we no longer hold (we restarted
+            # from an older checkpoint, or installed a different snapshot
+            # since advertising): unappliable. Ask for the full stream.
+            self._count("delta_snapshot_rejects")
+            self._incoming_snap = None
+            return [
+                (
+                    msg.src,
+                    InstallSnapshotChunkReply(
+                        term=self.term,
+                        src=self.id,
+                        last_index=msg.last_index,
+                        next_offset=0,
+                        need_full=True,
+                    ),
+                )
+            ]
         buf = self._incoming_snap
-        if buf is None or buf["last_index"] != msg.last_index:
+        if (
+            buf is None
+            or buf["last_index"] != msg.last_index
+            or buf.get("delta_base", -1) != msg.delta_base
+        ):
             if buf is not None:
                 # A different snapshot supersedes the partial transfer (the
                 # leader compacted again, or a new leader took over with a
@@ -2621,6 +2830,7 @@ class RaftNode:
             buf = {
                 "last_index": msg.last_index,
                 "last_term": msg.last_term,
+                "delta_base": msg.delta_base,
                 "data": bytearray(),
             }
             self._incoming_snap = buf
@@ -2633,6 +2843,8 @@ class RaftNode:
         # msg.offset > cursor: a gap (we lost our buffer, e.g. restart
         # mid-transfer); replying with our cursor rewinds the leader.
         if msg.done and cursor >= msg.total_bytes:
+            if msg.delta_base >= 0:
+                return self._finish_delta_snapshot(msg, buf, cursor, now)
             try:
                 snap = snapshot_from_bytes(bytes(buf["data"]))
             except (ValueError, KeyError, UnicodeDecodeError):
@@ -2685,16 +2897,111 @@ class RaftNode:
             )
         ]
 
+    def _finish_delta_snapshot(
+        self, msg: InstallSnapshotChunk, buf: dict, cursor: int, now: float
+    ) -> Outputs:
+        """Final chunk of a DELTA stream: reconstruct the full snapshot by
+        applying the shipped delta to our base snapshot's state. Any
+        failure — decode error, base drift mid-transfer, a machine without
+        delta support — falls back to requesting the full stream; it never
+        crashes the node or splices bad state."""
+        self._incoming_snap = None
+        base = self.snapshot
+        doc = None
+        state = None
+        try:
+            doc = snapshot_delta_from_bytes(bytes(buf["data"]))
+        except (ValueError, KeyError, UnicodeDecodeError):
+            self._count("snapshot_decode_failures")
+        if (
+            doc is not None
+            and base is not None
+            and base.state is not None
+            and base.last_index == doc.get("delta_base")
+        ):
+            try:
+                state = self.state_machine.apply_delta(base.state, doc["delta"])
+            except (NotImplementedError, TypeError, KeyError, AttributeError):
+                self._count("delta_apply_failures")
+        if doc is None or state is None:
+            self._count("delta_snapshot_rejects")
+            return [
+                (
+                    msg.src,
+                    InstallSnapshotChunkReply(
+                        term=self.term,
+                        src=self.id,
+                        last_index=msg.last_index,
+                        next_offset=0,
+                        need_full=True,
+                    ),
+                )
+            ]
+        cfg = doc.get("config")
+        snap = Snapshot(
+            last_index=doc["last_index"],
+            last_term=doc["last_term"],
+            state=state,
+            members=tuple(doc["members"]),
+            dedup=doc.get("dedup"),
+            config=None if cfg is None else ClusterConfig.from_wire(cfg),
+            delta_base=doc["delta_base"],
+        )
+        self._count("delta_snapshots_installed")
+        if snap.last_index > self.commit_index:
+            self._install_snapshot(snap, now)
+        if msg.leader_commit > self.commit_index:
+            self._advance_commit(min(msg.leader_commit, self._durable_prefix()), now)
+        return [
+            (
+                msg.src,
+                InstallSnapshotChunkReply(
+                    term=self.term,
+                    src=self.id,
+                    last_index=msg.last_index,
+                    next_offset=cursor,
+                    match_index=max(snap.last_index, self.commit_index),
+                ),
+            )
+        ]
+
     def _handle_InstallSnapshotChunkReply(
         self, msg: InstallSnapshotChunkReply, now: float
     ) -> Outputs:
         if self.role is not Role.LEADER or msg.term < self.term:
+            return []
+        if (
+            self.config.ack_piggyback
+            and not msg.need_full
+            and msg.match_index > 0
+            and self._snap_xfer.get(msg.src) is None
+            and msg.match_index <= self.match_index.get(msg.src, 0)
+        ):
+            # Duplicate ack of an already-completed transfer (chunk
+            # retransmissions on a slow link produce a burst of these).
+            # It carries no new position, and the classic path would
+            # regress _pipe_next to match+1 and re-send the whole append
+            # window once per straggler — on a serialization-limited link
+            # those duplicates congest the queue into a self-sustaining
+            # flood. A replacement incarnation genuinely below our match
+            # still recovers via the AppendEntries failure/backoff path.
             return []
         w = max(1, self.config.snapshot_chunk_window)
         if w <= 1:
             self._inflight[msg.src] = 0
         else:
             self._inflight[msg.src] = max(0, self._inflight.get(msg.src, 0) - 1)
+        if msg.need_full:
+            # The follower cannot apply the negotiated delta: drop the
+            # delta transfer and the stale base advertisement; the next
+            # _replicate_to_peer (right below) builds the full stream.
+            self._peer_snap_index.pop(msg.src, None)
+            self._snap_xfer.pop(msg.src, None)
+            self._inflight[msg.src] = 0
+            self._count("delta_snapshot_fallbacks")
+            more = self._replicate_to_peer(msg.src)
+            self._count("msgs_out", len(more))
+            return more
         if msg.match_index > 0:
             return self._snapshot_delivered(msg.src, msg.match_index, now)
         xfer = self._snap_xfer.get(msg.src)
@@ -2985,6 +3292,15 @@ class RaftNode:
         self._pipe_next = {}
         self._snap_xfer = {}
         self._incoming_snap = None
+        # Delta bases and peer advertisements are leader-volatile (retained
+        # states died with the process); buffered piggyback acks are
+        # in-flight wire state and die like any unsent message.
+        self._delta_bases = {}
+        self._peer_snap_index = {}
+        self._data_sent = set()
+        self._hb_match = {}
+        self._ack_buf = {}
+        self._ack_buf_time = -1.0
         self._batch_buffer = []
         self._buffered_ids = set()
         # Read/lease state is volatile: in-flight client reads die with the

@@ -34,6 +34,7 @@ from repro.core.types import (
     EntryId,
     FastFinalize,
     FastPropose,
+    FastVote,
     ForwardOperation,
     InstallSnapshotArgs,
     InstallSnapshotChunk,
@@ -208,6 +209,13 @@ def wire_size(msg: Message) -> int:
     if isinstance(msg, (FastPropose, FastFinalize)):
         entries = list(msg.window) or ([msg.entry] if msg.entry else [])
         return _MSG_BASE_BYTES + sum(_entry_bytes(e) for e in entries)
+    if isinstance(msg, FastVote):
+        # A vote is (index, entry_id) — id-sized, no payload. The head vote
+        # rides the base; piggybacked multi_votes (ack_piggyback) pay per
+        # folded vote so folding N votes is still far cheaper than N
+        # messages (N * _MSG_BASE_BYTES) but never free. Zero when the
+        # knob is off — the pre-piggyback byte stream is unchanged.
+        return _MSG_BASE_BYTES + 16 * len(msg.multi_votes)
     if isinstance(msg, ForwardOperation):
         n = _entry_bytes_cmd(msg.command) + sum(
             _entry_bytes_cmd(c) for c, _ in msg.batch
@@ -462,6 +470,7 @@ class Cluster:
         link_rng: str = "shared",
         link_rng_backend: str = "auto",
         witnesses: Sequence[NodeId] = (),
+        record_bytes: bool = False,
     ):
         if engine not in ("slotted", "legacy"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -476,6 +485,11 @@ class Cluster:
         self.sim = sim or Simulation(seed)
         self.link = LinkModel(loss, base_latency, jitter, msg_overhead,
                               bytes_per_ms, mtu_bytes)
+        # Wire accounting (Recorder.link_bytes) is always on for size-aware
+        # links, where wire_size is computed anyway; record_bytes=True also
+        # accounts on pure-latency links (an extra wire_size per message —
+        # observational only, never a schedule change).
+        self.record_bytes = record_bytes
         self.link_overrides: Dict[Tuple[NodeId, NodeId], LinkModel] = {}
         self._link_busy: Dict[Tuple[NodeId, NodeId], float] = {}
         self.blocked: set = set()  # directed (src, dst) pairs
@@ -603,6 +617,12 @@ class Cluster:
     def _link_for(self, src: NodeId, dst: NodeId) -> LinkModel:
         return self.link_overrides.get((src, dst), self.link)
 
+    def _bytes_accounted(self, src: NodeId, dst: NodeId) -> bool:
+        if self.record_bytes:
+            return True
+        link = self.link_overrides.get((src, dst), self.link)
+        return link.bytes_per_ms > 0 or link.mtu_bytes > 0
+
     def dispatch(self, src: NodeId, outputs: Sequence[Tuple[NodeId, Message]]) -> None:
         for dst, msg in outputs:
             self.send(src, dst, msg)
@@ -622,7 +642,10 @@ class Cluster:
     def _transmit(self, src: NodeId, dst: NodeId, msg: Message) -> None:
         link = self._link_for(src, dst)
         size_aware = link.bytes_per_ms > 0 or link.mtu_bytes > 0
-        size = wire_size(msg) if size_aware else 0
+        account = size_aware or self.record_bytes
+        size = wire_size(msg) if account else 0
+        if account:
+            self.metrics.bytes_sent(src, dst, type(msg).__name__, size)
         # Failure-profile link multipliers compose per DIRECTED link:
         # src's outbound times dst's inbound. Multiplicative, so a
         # lossless base network stays lossless and the RNG draw gating
@@ -644,6 +667,8 @@ class Cluster:
                 1.0, link.drop_probability(size) * loss_mult
             ):
                 self.metrics.count("dropped")
+                if account:
+                    self.metrics.bytes_dropped(src, dst, type(msg).__name__, size)
                 return
             delay = link.sample_latency(self.sim.rng) * lat_mult
         else:
@@ -654,6 +679,8 @@ class Cluster:
                 1.0, link.drop_probability(size) * loss_mult
             ):
                 self.metrics.count("dropped")
+                if account:
+                    self.metrics.bytes_dropped(src, dst, type(msg).__name__, size)
                 return
             delay = (
                 link.base_latency
@@ -675,6 +702,10 @@ class Cluster:
             def deliver():
                 node = self.nodes.get(dst)
                 if node is not None and node.alive and (src, dst) not in self.blocked:
+                    if self._bytes_accounted(src, dst):
+                        self.metrics.bytes_delivered(
+                            src, dst, type(msg).__name__, wire_size(msg)
+                        )
                     self.dispatch(dst, node.on_message(msg, self.sim.now))
 
             self.sim.schedule(delay, deliver)
@@ -692,6 +723,10 @@ class Cluster:
         lost exactly as before."""
         node = self.nodes.get(dst)
         if node is not None and node.alive and (src, dst) not in self.blocked:
+            if self._bytes_accounted(src, dst):
+                self.metrics.bytes_delivered(
+                    src, dst, type(msg).__name__, wire_size(msg)
+                )
             self.dispatch(dst, node.on_message(msg, self.sim.now))
 
     # ------------------------------------------------------------ workload

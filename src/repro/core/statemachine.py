@@ -89,6 +89,22 @@ class StateMachine:
         """
         return None
 
+    # -- delta snapshots (RaftConfig.delta_snapshots) ----------------------
+
+    def snapshot_delta(self, base_state: Any, target_state: Any) -> Optional[Any]:
+        """JSON-serializable delta transforming ``base_state`` (an earlier
+        ``snapshot()`` result) into ``target_state`` (a later one), or None
+        when the machine cannot beat a full transfer. The default — kept by
+        LogListMachine, whose state IS the history — is None, which makes
+        the leader fall back to streaming the full snapshot."""
+        return None
+
+    def apply_delta(self, base_state: Any, delta: Any) -> Any:
+        """Reconstruct the target snapshot state from ``base_state`` plus a
+        ``snapshot_delta``-produced delta. Must not mutate ``base_state``
+        (it is the receiver's live snapshot)."""
+        raise NotImplementedError
+
 
 class LogListMachine(StateMachine):
     """Seed-compatible machine: the state is the applied entry sequence.
@@ -210,6 +226,35 @@ class KVMachine(StateMachine):
 
     def size_bytes(self) -> int:
         return self._bytes
+
+    # -- delta snapshots ----------------------------------------------------
+
+    def snapshot_delta(self, base_state: Any, target_state: Any) -> Optional[Any]:
+        """O(live keys) delta: per-key versions make change detection a
+        single integer compare per key (a same-value CAS still bumps the
+        version, so every write is caught). Shape:
+        ``{"set": {key: [value, version]}, "del": [keys]}``."""
+        if not isinstance(base_state, dict) or not isinstance(target_state, dict):
+            return None
+        set_ops: Dict[str, List] = {}
+        for k, v in target_state.items():
+            b = base_state.get(k)
+            if b is None or b[1] != v[1] or b[0] != v[0]:
+                set_ops[k] = list(v)
+        deleted = sorted(k for k in base_state if k not in target_state)
+        return {"set": set_ops, "del": deleted}
+
+    def apply_delta(self, base_state: Any, delta: Any) -> Any:
+        state = (
+            {}
+            if base_state is None
+            else {k: list(v) for k, v in base_state.items()}
+        )
+        for k in delta.get("del", ()):
+            state.pop(k, None)
+        for k, v in delta.get("set", {}).items():
+            state[k] = list(v)
+        return state
 
     # -- read-only query path (linearizable reads) -------------------------
 

@@ -314,6 +314,12 @@ class Snapshot:
     members: Tuple[NodeId, ...] = ()
     dedup: Any = None
     config: Optional[ClusterConfig] = None
+    # Provenance of a delta-installed snapshot (RaftConfig.delta_snapshots):
+    # the last_index of the base snapshot the shipped delta was applied to.
+    # Purely informational once the state is materialized — the snapshot is
+    # complete either way — but persisted by the checkpoint store so a
+    # restored host's provenance survives. -1 = built from full state.
+    delta_base: int = -1
     # Cached wire size (see size_bytes); a declared field because the class
     # is slotted. Excluded from comparison/repr — it's derived state.
     _wire_bytes: Optional[int] = dataclasses.field(
@@ -361,6 +367,7 @@ class Snapshot:
             tuple(self.members),
             copy.deepcopy(self.dedup),
             self.config,  # frozen, safe to share
+            self.delta_base,
         )
         size = getattr(self, "_wire_bytes", None)
         if size is not None:
@@ -389,6 +396,10 @@ def snapshot_to_bytes(snap: Snapshot) -> bytes:
     }
     if snap.config is not None:
         payload["config"] = snap.config.to_wire()
+    if snap.delta_base >= 0:
+        # Delta provenance, persisted/streamed only when set so the byte
+        # stream of ordinary snapshots is unchanged.
+        payload["delta_base"] = snap.delta_base
     return json.dumps(payload, sort_keys=True).encode("utf-8")
 
 
@@ -402,7 +413,40 @@ def snapshot_from_bytes(data: bytes) -> Snapshot:
         members=tuple(payload["members"]),
         dedup=payload.get("dedup"),
         config=None if cfg is None else ClusterConfig.from_wire(cfg),
+        delta_base=payload.get("delta_base", -1),
     )
+
+
+def snapshot_delta_to_bytes(snap: Snapshot, delta: Any, delta_base: int) -> bytes:
+    """Delta-snapshot wire form (RaftConfig.delta_snapshots): the full
+    snapshot metadata — identity, members/config, dedup filter, all small —
+    but only the state machine DELTA against the follower-advertised base
+    snapshot ``delta_base`` instead of the full state. Streamed through the
+    same chunk/CRC/resume machinery as the full form; the receiver
+    reconstructs the complete state via ``StateMachine.apply_delta``."""
+    payload = {
+        "kind": "delta",
+        "last_index": snap.last_index,
+        "last_term": snap.last_term,
+        "members": list(snap.members),
+        "delta": delta,
+        "dedup": snap.dedup,
+        "delta_base": delta_base,
+        "version": 2,
+    }
+    if snap.config is not None:
+        payload["config"] = snap.config.to_wire()
+    return json.dumps(payload, sort_keys=True).encode("utf-8")
+
+
+def snapshot_delta_from_bytes(data: bytes) -> Dict[str, Any]:
+    """Decode a delta-snapshot stream. Raises ValueError when the payload
+    is not a delta doc (so a mixed-up buffer fails loudly into the normal
+    decode-failure fallback, never silently installs garbage)."""
+    payload = json.loads(data.decode("utf-8"))
+    if payload.get("kind") != "delta":
+        raise ValueError("not a delta snapshot payload")
+    return payload
 
 
 # --------------------------------------------------------------------------
@@ -493,6 +537,15 @@ class AppendEntriesReply(Message):
     success: bool = False
     match_index: int = 0
     hb_id: int = 0
+    # Delta-snapshot negotiation (RaftConfig.delta_snapshots): the
+    # follower's current snapshot.last_index, advertised on every reply so
+    # the leader knows which retained base a delta stream can build on.
+    # -1 = not advertised (knob off / no snapshot yet).
+    snap_index: int = -1
+    # Ack piggybacking (RaftConfig.ack_piggyback): how many same-tick acks
+    # were folded into this reply. The leader releases this many pipeline
+    # slots instead of one. Always 1 when the knob is off.
+    n_acks: int = 1
 
 
 @dataclasses.dataclass(slots=True)
@@ -534,6 +587,12 @@ class InstallSnapshotChunk(Message):
     total_bytes: int = 0
     done: bool = False
     leader_commit: int = 0
+    # Delta transfer (RaftConfig.delta_snapshots): the snapshot.last_index
+    # of the base this stream is a delta AGAINST. The receiver must still
+    # hold exactly that snapshot to apply the delta; otherwise it replies
+    # need_full=True and the leader restarts with the full stream.
+    # -1 = the stream is a full serialized snapshot.
+    delta_base: int = -1
 
 
 @dataclasses.dataclass(slots=True)
@@ -547,6 +606,11 @@ class InstallSnapshotChunkReply(Message):
     last_index: int = 0
     next_offset: int = 0
     match_index: int = 0
+    # Delta negotiation failure: the follower no longer holds the base the
+    # delta stream was computed against (restarted from an older
+    # checkpoint, installed a different snapshot since advertising). The
+    # leader drops the delta transfer and resends the full stream.
+    need_full: bool = False
 
 
 @dataclasses.dataclass(slots=True)
@@ -590,6 +654,11 @@ class FastVote(Message):
     entry_id: Optional[EntryId] = None
     voter: NodeId = ""
     window_votes: Tuple[Optional[EntryId], ...] = ()
+    # Ack piggybacking (RaftConfig.ack_piggyback): additional single-slot
+    # votes cast in the same delivery tick, folded behind the head vote as
+    # (index, entry_id) pairs — one message per acceptor per tick instead
+    # of one per FastPropose.
+    multi_votes: Tuple = ()  # Tuple[Tuple[int, EntryId], ...]
 
 
 @dataclasses.dataclass(slots=True)

@@ -31,6 +31,14 @@ behavior we never want to regress:
   back empty-logged and elected a candidate missing them (observed: a
   term-barrier noop overwriting committed index 4). The persisted
   acked-log floor now makes the restored node refuse such vote grants.
+* ``thin_link_delta_catchup`` — two lag/catch-up cycles on a
+  serialization-limited 60 B/ms link with the wire-efficiency knobs on
+  (``delta_snapshots`` + ``ack_piggyback``): the first catch-up is a full
+  snapshot stream, the second MUST negotiate a delta against the base the
+  follower advertised after installing the first (counters pin
+  ``delta_snapshots_sent/installed >= 1`` with ZERO fallbacks), while
+  folded acks and suppressed heartbeats stay observable — the
+  bandwidth-frugal stack end-to-end under the link model it exists for.
 * ``coalesced_read_dead_lease`` — a coalesced leader read admitted after
   the leader's lease died behind a partition (CheckQuorum off, a rival
   quorum having already committed a newer value) must fall back to a
